@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing: method registry, CSV emission, artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def emit(row: dict) -> None:
+    """One CSV-ish line per measurement (stable key order)."""
+    print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+
+def save_artifact(name: str, payload) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def run_ssumm(src, dst, v, k_frac: float, T: int = 20, seed: int = 0,
+              group_size: int = 32):
+    from repro.core import SummaryConfig, summarize
+
+    t0 = time.perf_counter()
+    res = summarize(src, dst, v, SummaryConfig(
+        T=T, k_frac=k_frac, seed=seed, group_size=group_size))
+    return {
+        "method": "ssumm",
+        "target": k_frac,
+        "rel_size": res.size_bits / res.input_size_bits,
+        "re1": res.re1,
+        "re2": res.re2,
+        "supernodes": res.num_supernodes,
+        "wall_s": time.perf_counter() - t0,
+    }
+
+
+def run_baseline(name: str, src, dst, v, frac: float, seed: int = 0):
+    from repro import baselines as B
+
+    fn = {
+        "kgs": B.summarize_kgs,
+        "s2l": B.summarize_s2l,
+        "saa_gs": lambda *a, **k: B.summarize_saa_gs(*a, **k),
+        "saa_gs_linear": lambda *a, **k: B.summarize_saa_gs(
+            *a, linear_sample=True, **k
+        ),
+    }[name]
+    res = fn(src, dst, v, target_frac=frac, seed=seed)
+    return {
+        "method": name,
+        "target": frac,
+        "rel_size": res.size_bits / res.input_size_bits,
+        "re1": res.re1,
+        "re2": res.re2,
+        "supernodes": res.num_supernodes,
+        "wall_s": res.wall_s,
+    }
+
+
+def quality(rows: list[dict]) -> None:
+    """Fig. 5's quality metric: distance to the per-dataset ideal point after
+    min-max normalizing size and RE₁ over all methods."""
+    sizes = np.array([r["rel_size"] for r in rows])
+    errs = np.array([r["re1"] for r in rows])
+
+    def norm(x):
+        lo, hi = x.min(), x.max()
+        return (x - lo) / (hi - lo) if hi > lo else np.zeros_like(x)
+
+    q = np.sqrt(norm(sizes) ** 2 + norm(errs) ** 2)
+    for r, qi in zip(rows, q):
+        r["quality"] = float(qi)

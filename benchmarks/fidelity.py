@@ -1,0 +1,67 @@
+"""Fidelity: the TPU-vectorized SSumM vs the paper-faithful sequential
+oracle (core/ref_numpy.py) on the same graphs and budgets.
+
+This is the paper-reproduction baseline of §Perf: the oracle implements
+Alg. 1/2 verbatim (sequential within-group merging, log₂|C| pair sampling,
+skip counters); the vectorized form is the beyond-paper TPU adaptation.
+Reported per (dataset, k): both sizes (must both be ≤ k), both RE₁, the
+RE ratio, and wall times.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit, save_artifact
+from repro.core import SummaryConfig, summarize
+from repro.core.ref_numpy import summarize_ref
+from repro.graphs import generate
+
+
+def run(datasets=("ego-facebook", "dblp"), scale=0.1, k_fracs=(0.3, 0.5),
+        T=20, seed=0) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        src, dst, v = generate(ds, seed=seed, scale=scale)
+        for k in k_fracs:
+            t0 = time.perf_counter()
+            vec = summarize(src, dst, v, SummaryConfig(T=T, k_frac=k,
+                                                       seed=seed))
+            t_vec = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            orc = summarize_ref(src, dst, v, k_frac=k, big_t=T, seed=seed)
+            t_orc = time.perf_counter() - t0
+            size_g = vec.input_size_bits
+            r = {
+                "bench": "fidelity", "dataset": ds, "V": v, "E": len(src),
+                "k_frac": k,
+                "oracle_rel_size": orc.size_bits / size_g,
+                "vector_rel_size": vec.size_bits / size_g,
+                "oracle_re1": orc.re1,
+                "vector_re1": vec.re1,
+                "re1_ratio_vec_over_oracle":
+                    vec.re1 / max(orc.re1, 1e-12),
+                "oracle_wall_s": t_orc,
+                "vector_wall_s": t_vec,
+                "budget_ok": bool(vec.size_bits <= k * size_g * (1 + 1e-6)
+                                  and orc.size_bits <= k * size_g * (1 + 1e-6)),
+            }
+            rows.append(r)
+            emit(r)
+    save_artifact("fidelity", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--datasets", nargs="+", default=["ego-facebook", "dblp"])
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--k-fracs", nargs="+", type=float, default=[0.3, 0.5])
+    ap.add_argument("--T", type=int, default=20)
+    args = ap.parse_args()
+    run(args.datasets, args.scale, tuple(args.k_fracs), args.T)
+
+
+if __name__ == "__main__":
+    main()

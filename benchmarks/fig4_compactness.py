@@ -1,0 +1,55 @@
+"""Fig. 4 / Fig. 7 (and Fig. 1's point): size-vs-error trade-off curves.
+
+SSumM sweeps the bit budget k ∈ {10%..60%}·Size(G); competitors sweep the
+supernode count ∈ {10%..60%}·|V| (their native knob, per Sect. 4.1). Both
+RE₁ (Fig. 4) and RE₂ (Fig. 7) are reported for every point. Datasets are
+the offline synthetic stand-ins (graphs/synthetic.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, quality, run_baseline, run_ssumm, save_artifact
+from repro.graphs import generate
+
+DEFAULT_FRACS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
+
+
+def run(datasets=("ego-facebook",), scale=0.25, fracs=DEFAULT_FRACS,
+        methods=("ssumm", "kgs", "s2l", "saa_gs"), seed: int = 0,
+        T: int = 20) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        src, dst, v = generate(ds, seed=seed, scale=scale)
+        per_ds: list[dict] = []
+        for frac in fracs:
+            for m in methods:
+                if m == "ssumm":
+                    r = run_ssumm(src, dst, v, k_frac=frac, T=T, seed=seed)
+                else:
+                    r = run_baseline(m, src, dst, v, frac, seed=seed)
+                r.update({"bench": "fig4", "dataset": ds, "V": v, "E": len(src)})
+                per_ds.append(r)
+                emit(r)
+        quality(per_ds)
+        rows.extend(per_ds)
+    save_artifact("fig4_compactness", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--datasets", nargs="+", default=["ego-facebook", "dblp"])
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--fracs", nargs="+", type=float, default=list(DEFAULT_FRACS))
+    ap.add_argument("--methods", nargs="+",
+                    default=["ssumm", "kgs", "s2l", "saa_gs"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.datasets, args.scale, tuple(args.fracs), tuple(args.methods),
+        args.seed)
+
+
+if __name__ == "__main__":
+    main()

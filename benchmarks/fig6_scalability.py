@@ -1,0 +1,63 @@
+"""Fig. 6 / Thm. 3.4: linear scalability — SSumM runtime vs |E|.
+
+Subsamples of the amazon0601/skitter stand-ins at geometric |E| steps; jit
+compile time is excluded (one warm-up run at the smallest size, then every
+size reuses the same compiled iteration because shapes enter the jit cache
+per size — we therefore report the *second* run per size). A least-squares
+fit of time vs |E| reports R² against the linear model.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_artifact
+from repro.core import SummaryConfig, summarize
+from repro.graphs import generate
+
+
+def run(dataset="amazon0601", scales=(0.01, 0.02, 0.04, 0.08), T=5,
+        seed=0, k_frac=0.3) -> list[dict]:
+    rows = []
+    for sc in scales:
+        src, dst, v = generate(dataset, seed=seed, scale=sc)
+        cfg = SummaryConfig(T=T, k_frac=k_frac, seed=seed)
+        summarize(src, dst, v, cfg)  # warm-up: jit compile for this size
+        t0 = time.perf_counter()
+        res = summarize(src, dst, v, cfg)
+        dt = time.perf_counter() - t0
+        r = {"bench": "fig6", "dataset": dataset, "scale": sc, "V": v,
+             "E": len(src), "T": T, "wall_s": dt,
+             "rel_size": res.size_bits / res.input_size_bits, "re1": res.re1}
+        rows.append(r)
+        emit(r)
+    es = np.array([r["E"] for r in rows], float)
+    ts = np.array([r["wall_s"] for r in rows], float)
+    k = float((es * ts).sum() / (es * es).sum())  # through-origin linear fit
+    ss_res = float(((ts - k * es) ** 2).sum())
+    ss_tot = float(((ts - ts.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    fit = {"bench": "fig6_fit", "dataset": dataset, "slope_s_per_edge": k,
+           "r2_linear": r2}
+    emit(fit)
+    rows.append(fit)
+    save_artifact("fig6_scalability", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="amazon0601")
+    ap.add_argument("--scales", nargs="+", type=float,
+                    default=[0.01, 0.02, 0.04, 0.08])
+    ap.add_argument("--T", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.dataset, tuple(args.scales), args.T, args.seed)
+
+
+if __name__ == "__main__":
+    main()

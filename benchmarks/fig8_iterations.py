@@ -1,0 +1,52 @@
+"""Fig. 8: effect of the iteration count T — RE₁ vs t for several targets.
+
+The per-iteration history that ``summarize`` already records provides the
+whole curve in one run per target size; the paper's claim to check is
+convergence within T=20 for every target.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, save_artifact
+from repro.core import SummaryConfig, summarize
+from repro.graphs import generate
+
+
+def run(dataset="amazon0601", scale=0.02, targets=(0.3, 0.5, 0.8), T=20,
+        seed=0) -> list[dict]:
+    src, dst, v = generate(dataset, seed=seed, scale=scale)
+    rows = []
+    for k_frac in targets:
+        res = summarize(src, dst, v,
+                        SummaryConfig(T=T, k_frac=k_frac, seed=seed))
+        for h in res.history:
+            r = {"bench": "fig8", "dataset": dataset, "target": k_frac,
+                 "t": h["t"], "re1": h["re1"],
+                 "size_bits": h["size_bits"],
+                 "supernodes": h["num_supernodes"]}
+            rows.append(r)
+            emit(r)
+        rows.append({"bench": "fig8_final", "target": k_frac,
+                     "iterations_run": res.iterations_run,
+                     "re1": res.re1,
+                     "rel_size": res.size_bits / res.input_size_bits})
+        emit(rows[-1])
+    save_artifact("fig8_iterations", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="amazon0601")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--targets", nargs="+", type=float, default=[0.3, 0.5, 0.8])
+    ap.add_argument("--T", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.dataset, args.scale, tuple(args.targets), args.T, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Kernel micro-benchmark: merge-gain scoring throughput.
+
+Reports wall time and achieved pair-score rate for (a) the jitted jnp
+oracle (the XLA path a CPU host runs) and (b) the Pallas kernel in
+interpret mode (functional check only — interpret timing is meaningless for
+TPU; the BlockSpec/VMEM sizing notes live in kernels/merge_gain.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_artifact
+from repro.kernels import ops as kops
+
+
+def make_operands(g, c, u, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.poisson(0.5, size=(g, c, u)).astype(np.float32)
+    n = rng.integers(1, 50, size=(g, c)).astype(np.float32)
+    s = rng.poisson(0.3, size=(g, c)).astype(np.float32)
+    n_u = rng.integers(1, 50, size=(g, u)).astype(np.float32)
+    cidx = rng.integers(0, u, size=(g, c)).astype(np.int32)
+    w = rng.poisson(0.2, size=(g, c, c)).astype(np.float32)
+    w = np.maximum(w, np.swapaxes(w, 1, 2))
+    t = (m.sum(-1) * 10.0 + 30.0).astype(np.float32)
+    args = [jnp.asarray(x) for x in (m, n, s, t, n_u, cidx, w)]
+    return args + [jnp.float32(60.0), jnp.float32(20.0)]
+
+
+def bench(fn, args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(sizes=((256, 32, 128), (64, 64, 256)), iters=5) -> list[dict]:
+    rows = []
+    for g, c, u in sizes:
+        args = make_operands(g, c, u)
+        t_ref = bench(lambda *a: kops.merge_gain(*a, use_pallas=False), args,
+                      iters)
+        pairs = g * c * c
+        r = {"bench": "kernel_merge_gain", "G": g, "C": c, "U": u,
+             "impl": "oracle_xla", "wall_s": t_ref,
+             "pair_scores_per_s": pairs / t_ref,
+             "flops_est": pairs * u * 12.0}
+        rows.append(r)
+        emit(r)
+        t_pl = bench(
+            lambda *a: kops.merge_gain(*a, use_pallas=True, interpret=True),
+            args, 1)
+        r2 = dict(r, impl="pallas_interpret", wall_s=t_pl,
+                  pair_scores_per_s=pairs / t_pl)
+        rows.append(r2)
+        emit(r2)
+    save_artifact("kernelbench", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    run(iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""§Roofline: assemble the per-(arch × shape × mesh) table from the dry-run
+artifacts (launch/dryrun.py JSONs). Emits one row per cell: the three terms
+in seconds, the dominant bottleneck, MODEL_FLOPS/HLO ratio, and the
+roofline fraction. ``--perf`` additionally lists tagged perf-iteration
+variants side by side with their baselines (§Perf before/after)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import emit, save_artifact
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(dryrun_dir: str) -> list[dict]:
+    rows = []
+    if not os.path.isdir(dryrun_dir):
+        return rows
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dryrun_dir, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def run(dryrun_dir: str = DEFAULT_DIR, include_tags: bool = False) -> list[dict]:
+    out = []
+    for r in load(dryrun_dir):
+        if r.get("tag") and not include_tags:
+            continue
+        row = {"bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+               "mesh": r["mesh"], "tag": r.get("tag", ""),
+               "status": r["status"]}
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            row.update({
+                "t_compute_s": rf["t_compute"],
+                "t_memory_s": rf["t_memory"],
+                "t_collective_s": rf["t_collective"],
+                "bottleneck": rf["bottleneck"],
+                "useful_ratio": rf["useful_ratio"],
+                "roofline_frac": rf["roofline_fraction"],
+                "hbm_args_gib_per_dev": r["memory"]["argument_bytes"] / 2**30,
+                "coll_bytes_per_dev": r["collectives"]["total"],
+            })
+        else:
+            row["error"] = r.get("error", "")[:120]
+        out.append(row)
+        emit(row)
+    save_artifact("roofline", out)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--perf", action="store_true", help="include tagged variants")
+    args = ap.parse_args()
+    run(args.dir, include_tags=args.perf)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 2: the dataset registry (offline synthetic stand-ins) with realized
+|V|, |E| and Size(G) per Eq. (3). Web-scale rows are listed but materialized
+only at --full (they exist for the dry-run / distributed path)."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, save_artifact
+from repro.graphs import DATASETS, generate
+
+
+def run(scale=0.05, materialize_max_e=5_000_000) -> list[dict]:
+    rows = []
+    for name, spec in DATASETS.items():
+        row = {"bench": "table2", "name": name, "short": spec.short,
+               "V_spec": spec.v, "E_spec": spec.e_target, "kind": spec.kind,
+               "size_g_bits_spec": 2.0 * spec.e_target * np.log2(max(spec.v, 2))}
+        if spec.e_target * scale <= materialize_max_e:
+            src, dst, v = generate(name, scale=scale)
+            row.update({"scale": scale, "V": v, "E": len(src),
+                        "size_g_bits": 2.0 * len(src) * np.log2(max(v, 2))})
+        else:
+            row.update({"scale": 0, "V": 0, "E": 0, "size_g_bits": 0,
+                        "note": "dry-run only"})
+        rows.append(row)
+        emit(row)
+    save_artifact("table2_datasets", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.05)
+    args = ap.parse_args()
+    run(args.scale)
+
+
+if __name__ == "__main__":
+    main()

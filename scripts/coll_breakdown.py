@@ -1,0 +1,44 @@
+"""Collective breakdown for one cell: group HLO collective ops by kind+shape
+to find the dominant traffic source (hillclimb profiling)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import collections
+import re
+import sys
+
+from repro.configs import get_config
+from repro.launch.lowering import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.dist.sharding import make_rules
+from repro.launch.costs import _COLL_RE, _shape_bytes
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variant = dict(kv.split("=") for kv in sys.argv[3:])
+    cfg = get_config(arch)
+    mesh = make_production_mesh()
+    rules = None
+    if variant:
+        from repro.launch.dryrun import apply_variants
+        cfg, rules = apply_variants(cfg, mesh, shape, variant)
+    cell = build_cell(cfg, shape, mesh, rules=rules)
+    compiled = lower_cell(cell).compile()
+    hlo = compiled.as_text()
+    agg = collections.Counter()
+    cnt = collections.Counter()
+    for m in _COLL_RE.finditer(hlo):
+        shapes, op = m.group(1), m.group(2)
+        key = f"{op} {shapes[:70]}"
+        agg[key] += _shape_bytes(shapes)
+        cnt[key] += 1
+    total = sum(agg.values())
+    print(f"total collective operand bytes/dev (unweighted): {total/2**30:.2f} GiB")
+    for key, b in agg.most_common(12):
+        print(f"  {b/2**30:7.2f} GiB  x{cnt[key]:<4} {key}")
+    ca = compiled.cost_analysis()
+    print("flops/dev:", ca.get("flops"), "bytes/dev:", ca.get("bytes accessed"))
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Render EXPERIMENTS.md-ready markdown tables from artifacts/dryrun."""
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+
+rows = []
+for fn in sorted(os.listdir(DIR)):
+    if fn.endswith(".json"):
+        with open(os.path.join(DIR, fn)) as f:
+            rows.append(json.load(f))
+
+base = [r for r in rows if not r.get("tag")]
+tagged = [r for r in rows if r.get("tag")]
+
+print("### Dry-run + roofline — baselines\n")
+print("| arch | shape | mesh | compile_s | args GiB/dev | t_comp s | t_mem s"
+      " | t_coll s | bottleneck | useful | roofline frac |")
+print("|---|---|---|---|---|---|---|---|---|---|---|")
+for r in base:
+    if r["status"] != "ok":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR: "
+              f"{r.get('error','')[:40]} |||||||")
+        continue
+    rf = r["roofline"]
+    mem = r["memory"]["argument_bytes"] / 2**30
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+          f"{r.get('compile_s', 0):.0f} | {mem:.2f} | "
+          f"{rf['t_compute']:.3g} | {rf['t_memory']:.3g} | "
+          f"{rf['t_collective']:.3g} | {rf['bottleneck']} | "
+          f"{rf['useful_ratio']:.2f} | {100*rf['roofline_fraction']:.2f}% |")
+
+n_ok = sum(r["status"] == "ok" for r in base)
+print(f"\n{n_ok}/{len(base)} baseline cells ok\n")
+
+print("### Perf variants (tagged)\n")
+print("| arch | shape | mesh | tag | t_comp | t_mem | t_coll | bound s | frac |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in tagged:
+    if r["status"] != "ok":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+              f"ERROR {r.get('error','')[:40]} |||||")
+        continue
+    rf = r["roofline"]
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+          f"{rf['t_compute']:.3g} | {rf['t_memory']:.3g} | "
+          f"{rf['t_collective']:.3g} | {rf['step_time_bound_s']:.3g} | "
+          f"{100*rf['roofline_fraction']:.2f}% |")

@@ -1,0 +1,100 @@
+"""Dev probe (superseded by `python -m repro.launch.dryrun` for real runs):
+lower+compile one full-size cell and print raw memory/cost analysis.
+Run: PYTHONPATH=src python scripts/probe_dryrun.py <arch> <shape> [--multi-pod]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config, SHAPES
+from repro.dist.sharding import make_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model, input_specs
+from repro.optim import adamw_init
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "gemma_7b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    multi = "--multi-pod" in sys.argv
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi)
+    mode = "train" if sp.kind == "train" else "serve"
+    rules = make_rules(mesh, mode)
+    model = build_model(cfg)
+
+    t0 = time.time()
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    axes = model.axes()
+    p_shard = jax.tree.map(
+        lambda s, a: rules.sharding(a, s.shape), params_s, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    batch = input_specs(cfg, shape)
+    print(f"eval_shape: {time.time()-t0:.1f}s; params leaves={len(jax.tree.leaves(params_s))}")
+
+    if sp.kind == "train":
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        o_shard = type(opt_s)(
+            step=rules.sharding((), ()),
+            mu=jax.tree.map(lambda s, a: rules.sharding(a, s.shape), opt_s.mu, axes,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            nu=jax.tree.map(lambda s, a: rules.sharding(a, s.shape), opt_s.nu, axes,
+                            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+        )
+        b_shard = jax.tree.map(
+            lambda s: rules.sharding(("batch", "seq") if len(s.shape) == 2 else ("batch", "seq", None), s.shape),
+            batch, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+        def step(params, opt, b):
+            return model.train_step(params, opt, b, rules)
+
+        t0 = time.time()
+        lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard)).lower(params_s, opt_s, batch)
+        t_lower = time.time() - t0
+        print(f"lower: {t_lower:.1f}s")
+    else:
+        if sp.kind == "decode":
+            cache_axes = model.cache_axes()
+            c_shard = jax.tree.map(lambda a: None, cache_axes, is_leaf=lambda x: isinstance(x, tuple))
+            batch_shardings = {
+                "token": rules.sharding(("batch",), (sp.global_batch,)),
+                "pos": rules.sharding((), ()),
+                "cache": jax.tree.map(
+                    lambda s, a: rules.sharding(a, s.shape), batch["cache"], cache_axes,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            }
+
+            def step(params, b):
+                return model.serve_step(params, b, rules)
+        else:  # prefill
+            batch_shardings = jax.tree.map(
+                lambda s: rules.sharding(("batch", "seq") if len(s.shape) == 2 else ("batch", "seq", None), s.shape),
+                batch, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+            def step(params, b):
+                return model.prefill_step(params, b, rules)
+
+        t0 = time.time()
+        lowered = jax.jit(step, in_shardings=(p_shard, batch_shardings)).lower(params_s, batch)
+        t_lower = time.time() - t0
+        print(f"lower: {t_lower:.1f}s")
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_comp = time.time() - t0
+    print(f"compile: {t_comp:.1f}s")
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    print("memory:", ma)
+    print("flops:", ca.get("flops"), "bytes:", ca.get("bytes accessed"))
+
+
+if __name__ == "__main__":
+    main()

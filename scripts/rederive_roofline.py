@@ -1,0 +1,30 @@
+"""Recompute the roofline block of dry-run artifacts from their stored
+cost/collective inputs (no recompilation) — used when the analytic
+correction model changes (e.g. the remat="dots" multiplier)."""
+import json
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.launch import costs as rcosts
+
+for path in sys.argv[1:]:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok" or "cost" not in rec:
+        print(f"skip {path}")
+        continue
+    cfg = get_config(rec["arch"])
+    rv = rec.get("variants", {}).get("remat")
+    remat = not rv or rv == "full"
+    rec["roofline"] = rcosts.roofline(
+        hlo_flops_per_dev=rec["cost"]["flops"],
+        hlo_bytes_per_dev=rec["cost"]["bytes_accessed"],
+        coll_bytes_per_dev=rec["collectives"]["total"],
+        cfg=cfg, sp=SHAPES[rec["shape"]], n_chips=rec["n_devices"],
+        remat=remat,
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    rf = rec["roofline"]
+    print(f"{path}: comp={rf['t_compute']:.3f} mem={rf['t_memory']:.3f} "
+          f"coll={rf['t_collective']:.3f} frac={rf['roofline_fraction']:.4f}")

@@ -1,0 +1,41 @@
+"""Measure the scoring-only cost of the merge-gain oracle at the per-device
+web-uk-05 shapes (§Perf iteration C3): the dry-run runs the pure-jnp oracle
+(Pallas interpret mode is a host callback, invisible to cost_analysis), so
+its dense [G,C,C,U] materializations inflate the memory term. This script
+quantifies that inflation and the Pallas kernel's streaming-bytes replacement.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+G, C, U = (int(x) for x in (sys.argv[1:4] or (2407, 64, 128)))
+
+args = [
+    jnp.zeros((G, C, U), jnp.float32),   # m
+    jnp.ones((G, C), jnp.float32),       # n
+    jnp.zeros((G, C), jnp.float32),      # s
+    jnp.ones((G, C), jnp.float32),       # t
+    jnp.ones((G, U), jnp.float32),       # n_u
+    jnp.zeros((G, C), jnp.int32),        # cidx
+    jnp.zeros((G, C, C), jnp.float32),   # w
+]
+lowered = jax.jit(ref.merge_gain_ref).lower(*args, jnp.float32(60.0),
+                                            jnp.float32(20.0))
+ca = lowered.compile().cost_analysis()
+oracle_bytes = float(ca.get("bytes accessed", 0.0))
+oracle_flops = float(ca.get("flops", 0.0))
+
+# Pallas kernel HBM traffic: every operand read once, outputs written once
+# (the [C,U]/[C,C] working set lives in VMEM for the whole group program)
+operand = (G * C * U + G * C * 4 + G * U + G * C * C) * 4.0
+outputs = 2 * G * C * C * 4.0
+kernel_bytes = operand + outputs
+
+print(f"shapes G={G} C={C} U={U}")
+print(f"oracle  bytes_accessed: {oracle_bytes/2**30:8.2f} GiB  "
+      f"flops {oracle_flops:.3e}")
+print(f"pallas  streaming bytes: {kernel_bytes/2**30:8.2f} GiB")
+print(f"inflation: {oracle_bytes/kernel_bytes:.1f}x")

@@ -1,0 +1,3 @@
+"""repro — SSumM (KDD 2020) sparse graph summarization + distributed LM substrate."""
+
+__version__ = "1.0.0"

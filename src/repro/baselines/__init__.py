@@ -1,0 +1,12 @@
+from repro.baselines.common import BaselineResult, evaluate_partition
+from repro.baselines.kgs import summarize_kgs
+from repro.baselines.s2l import summarize_s2l
+from repro.baselines.saa_gs import summarize_saa_gs
+
+__all__ = [
+    "BaselineResult",
+    "evaluate_partition",
+    "summarize_kgs",
+    "summarize_s2l",
+    "summarize_saa_gs",
+]

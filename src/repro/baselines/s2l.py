@@ -1,0 +1,96 @@
+"""S2L (Riondato, García-Soriano & Bonchi, DMKD'17): summarization via
+geometric clustering of adjacency rows.
+
+Each node is its adjacency row in R^|V|; clustering rows with k-means gives
+supernodes with an ℓ_p reconstruction guarantee. As in the paper we avoid
+the |V|-dimensional distance computations with a random-projection sketch
+(Indyk-style dimensionality reduction to d = O(log|V|) dims, built directly
+from the edge list in O(|E|·d)), then run k-means++ seeding + Lloyd in JAX
+(one jit'd vectorized assignment/update per iteration — this baseline's
+clustering is the only genuinely TPU-shaped competitor computation).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import BaselineResult, evaluate_partition
+
+
+def project_rows(src, dst, num_nodes: int, dims: int, seed: int = 0):
+    """Random projection of adjacency rows: P[u] = Σ_{v∈N(u)} R[v]."""
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal((num_nodes, dims)).astype(np.float32)
+    r /= np.sqrt(dims)
+    p = np.zeros((num_nodes, dims), np.float32)
+    np.add.at(p, np.asarray(src), r[np.asarray(dst)])
+    np.add.at(p, np.asarray(dst), r[np.asarray(src)])
+    return p
+
+
+@jax.jit
+def _assign(x, centers):
+    d = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        - 2.0 * x @ centers.T
+        + jnp.sum(centers * centers, axis=1)[None, :]
+    )
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def _update(x, assign, k):
+    sums = jax.ops.segment_sum(x, assign, num_segments=k)
+    cnts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), assign,
+                               num_segments=k)
+    return sums / jnp.maximum(cnts, 1.0)[:, None], cnts
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 25, seed: int = 0):
+    """k-means++ seeding (sampled) + jit'd Lloyd iterations."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    xd = jnp.asarray(x)
+    # k-means++ on a subsample (adaptive sampling per the S2L paper)
+    m = min(n, max(4 * k, 1024))
+    sub = xd[rng.choice(n, size=m, replace=False)]
+    centers = [sub[rng.integers(0, m)]]
+    d2 = jnp.sum((sub - centers[0]) ** 2, axis=1)
+    for _ in range(1, k):
+        probs = np.asarray(d2, np.float64)
+        tot = probs.sum()
+        if tot <= 0:
+            centers.append(sub[rng.integers(0, m)])
+            continue
+        i = rng.choice(m, p=probs / tot)
+        centers.append(sub[i])
+        d2 = jnp.minimum(d2, jnp.sum((sub - centers[-1]) ** 2, axis=1))
+    c = jnp.stack(centers)
+    assign = _assign(xd, c)
+    for _ in range(iters):
+        c, cnts = _update(xd, assign, k)
+        # re-seed empty clusters at random points
+        empty = np.flatnonzero(np.asarray(cnts) == 0)
+        if empty.size:
+            c = c.at[jnp.asarray(empty)].set(xd[rng.integers(0, n, empty.size)])
+        new_assign = _assign(xd, c)
+        if bool(jnp.all(new_assign == assign)):
+            break
+        assign = new_assign
+    return np.asarray(assign)
+
+
+def summarize_s2l(src, dst, num_nodes: int, target_frac: float = 0.3,
+                  dims: int | None = None, iters: int = 25,
+                  seed: int = 0) -> BaselineResult:
+    t0 = time.perf_counter()
+    k = max(int(target_frac * num_nodes), 2)
+    dims = dims or max(int(np.ceil(np.log2(max(num_nodes, 2)))) * 2, 8)
+    x = project_rows(src, dst, num_nodes, dims, seed)
+    assign = kmeans(x, k, iters=iters, seed=seed)
+    res = evaluate_partition(src, dst, num_nodes, assign, "s2l")
+    res.wall_s = time.perf_counter() - t0
+    return res

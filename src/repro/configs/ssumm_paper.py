@@ -1,0 +1,42 @@
+"""The paper's own workloads: SSumM graph-summarization configs.
+
+Small/mid datasets run for real (synthetic Table-2 stand-ins); the web-scale
+rows are dry-run-only shapes proving the distributed pipeline fits a
+512-chip mesh (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.types import SummaryConfig
+from repro.graphs.synthetic import DATASETS
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphWorkload:
+    dataset: str
+    k_frac: float = 0.3
+    cfg: SummaryConfig = SummaryConfig()
+    dry_run_only: bool = False
+
+    @property
+    def v(self) -> int:
+        return DATASETS[self.dataset].v
+
+    @property
+    def e(self) -> int:
+        return DATASETS[self.dataset].e_target
+
+
+WORKLOADS: dict[str, GraphWorkload] = {
+    name: GraphWorkload(
+        dataset=name,
+        dry_run_only=name in ("web-uk-02", "web-uk-05", "livejournal", "skitter"),
+    )
+    for name in DATASETS
+}
+
+# benchmark defaults (paper Sect. 4.1: targets 10%–60% of Size(G), T=20)
+TARGET_FRACS = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6]
+DEFAULT_T = 20

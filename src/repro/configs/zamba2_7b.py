@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 blocks + shared attention block every 6
+[arXiv:2411.15242]. Sub-quadratic (SSM) → long_500k RUNS (attention sites
+keep full KV caches — 13 sites)."""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    attn_every=6,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=512, ssm_state=8, ssm_head_dim=16, attn_every=2, dtype="float32",
+    )

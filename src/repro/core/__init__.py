@@ -1,0 +1,15 @@
+"""repro.core — SSumM: sparse summarization of massive graphs (KDD'20).
+
+Vectorized TPU-native implementation (`summarize`) plus the faithful
+sequential oracle (`ref_numpy.summarize_ref`). See DESIGN.md §3–§4.
+"""
+
+from repro.core.summarize import summarize  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    Graph,
+    SummaryConfig,
+    SummaryResult,
+    SummaryState,
+    init_state,
+    make_graph,
+)

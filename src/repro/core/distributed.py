@@ -1,0 +1,481 @@
+"""Distributed SSumM: edge-sharded summarization under shard_map.
+
+Scale story (the paper's headline): one 64 GB host caps the reference
+implementation at ~0.8 B edges; here edges are sharded over every mesh axis
+while the partition vector (``node2super``/``size``, 4 B/node) is replicated
+— web-uk-05 (39.5 M nodes, 0.78 B edges) takes ~12 MB of edges + ~316 MB of
+replicated state per chip on a 256-chip pod (dry-run proof in EXPERIMENTS.md
+§Dry-run).
+
+Scheme (DESIGN.md §7):
+  * **ownership**: supernode ``A`` is owned by device ``hash_t(A) mod n_dev``;
+    the hash is re-drawn every iteration so all supernode pairs are
+    eventually co-owned (candidate sets never span owners — the exact
+    analogue of the paper's disjoint candidate sets).
+  * **pair exchange**: each device aggregates its local edge shard into
+    partial (lo, hi, cnt) pair records and routes each record to *both*
+    endpoint owners with a fixed-capacity ``all_to_all`` bucket shuffle;
+    owners re-aggregate to exact global pair counts.
+  * **merge round**: owners build group tables and run the merge-gain kernel
+    locally; accepted (a, b) merge lists are ``all_gather``-ed and applied
+    identically to the replicated partition on every device.
+  * **metrics**: per-pair closed forms are summed over *lo-owned* pairs only
+    (each pair counted once), ``psum``-ed, with ω_max ``pmax``-ed first so
+    Size(Ḡ) is bit-identical to the single-device evaluation.
+
+Bucket overflow (records beyond capacity) is counted and reported in the
+stats — with the default capacity factor the shuffle is exact; tests verify
+equality with the single-device pair table on multihost CPU meshes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import costs, shingles, tables
+from repro.core.merge import apply_merges, select_matching
+from repro.core.types import PairTable, SummaryConfig, SummaryState
+from repro.kernels import ops as kops
+from repro.utils import boundaries_from_keys, segment_ids_from_boundaries
+
+
+def _owner_hash(ids, salt, n_dev: int):
+    """Cheap re-drawable ownership hash (Knuth multiplicative)."""
+    x = (ids.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ salt.astype(jnp.uint32)
+    x = (x >> 16) ^ x
+    return (x % jnp.uint32(n_dev)).astype(jnp.int32)
+
+
+def _local_pairs(src, dst, node2super, num_nodes: int):
+    """Local partial pair table from this device's edge shard (sorted)."""
+    e = src.shape[0]
+    pad = src < 0  # padded edge slots
+    su = jnp.where(pad, num_nodes, node2super[jnp.maximum(src, 0)])
+    sv = jnp.where(pad, num_nodes, node2super[jnp.maximum(dst, 0)])
+    lo = jnp.minimum(su, sv)
+    hi = jnp.maximum(su, sv)
+    lo_s, hi_s = jax.lax.sort((lo, hi), num_keys=2)
+    is_new = boundaries_from_keys(lo_s, hi_s)
+    pid = segment_ids_from_boundaries(is_new)
+    cnt = jax.ops.segment_sum(
+        jnp.where(lo_s < num_nodes, 1.0, 0.0), pid, num_segments=e
+    )
+    plo = jnp.zeros((e,), jnp.int32).at[pid].max(lo_s)
+    phi = jnp.zeros((e,), jnp.int32).at[pid].max(hi_s)
+    valid = (jnp.arange(e) <= pid[-1]) & (plo < num_nodes) & (cnt > 0)
+    return plo, phi, jnp.where(valid, cnt, 0.0), valid
+
+
+def _route(plo, phi, cnt, valid, owner, n_dev: int, cap: int):
+    """Pack pair records into per-destination buckets [n_dev, cap, 3]."""
+    n = plo.shape[0]
+    dest = jnp.where(valid, owner, n_dev)
+    order = jnp.argsort(dest)
+    dest_s = dest[order]
+    is_new = boundaries_from_keys(dest_s)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start = jax.lax.cummax(jnp.where(is_new, idx, 0))
+    slot = idx - start
+    ok = (slot < cap) & (dest_s < n_dev)
+    flat = jnp.where(ok, dest_s * cap + slot, n_dev * cap)
+    rec = jnp.stack(
+        [plo[order].astype(jnp.float32), phi[order].astype(jnp.float32), cnt[order]],
+        axis=-1,
+    )
+    buck = jnp.full((n_dev * cap + 1, 3), -1.0, jnp.float32)
+    buck = buck.at[flat].set(rec, mode="drop")[:-1]
+    overflow = jnp.sum(((~ok) & (dest_s < n_dev)).astype(jnp.int32))
+    return buck.reshape(n_dev, cap, 3), overflow
+
+
+def _aggregate(recv, num_nodes: int):
+    """Merge partial pair records from all sources into exact global counts."""
+    rlo = recv[:, 0].astype(jnp.int32)
+    rhi = recv[:, 1].astype(jnp.int32)
+    rvalid = recv[:, 0] >= 0
+    key_lo = jnp.where(rvalid, rlo, num_nodes)
+    key_hi = jnp.where(rvalid, rhi, num_nodes)
+    rcnt = jnp.where(rvalid, recv[:, 2], 0.0)
+    klo, khi, kcnt = jax.lax.sort((key_lo, key_hi, rcnt), num_keys=2)
+    is_new = boundaries_from_keys(klo, khi)
+    pid = segment_ids_from_boundaries(is_new)
+    m = klo.shape[0]
+    gcnt = jax.ops.segment_sum(kcnt, pid, num_segments=m)
+    glo = jnp.zeros((m,), jnp.int32).at[pid].max(klo)
+    ghi = jnp.zeros((m,), jnp.int32).at[pid].max(khi)
+    gvalid = (jnp.arange(m) <= pid[-1]) & (glo < num_nodes) & (gcnt > 0)
+    return glo, ghi, jnp.where(gvalid, gcnt, 0.0), gvalid
+
+
+def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
+                          num_edges_global: int, capacity_factor: float = 4.0):
+    """Build the jit-able one-iteration distributed step for ``mesh``.
+
+    Inputs at call time: padded edge shards (int32[E_pad], -1 padding),
+    replicated ``SummaryState``, θ scalar, and an ownership salt. Returns
+    the updated replicated state + global stats.
+    """
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    v = num_nodes
+    log2v = float(np.log2(max(v, 2)))
+
+    def step(src_l, dst_l, state: SummaryState, theta, salt):
+        e_loc = src_l.shape[0]
+        cap = int(e_loc * capacity_factor / n_dev) + 8
+        plo, phi, cnt, valid = _local_pairs(src_l, dst_l, state.node2super, v)
+        own_lo = _owner_hash(plo, salt, n_dev)
+        own_hi = _owner_hash(phi, salt, n_dev)
+        b1, of1 = _route(plo, phi, cnt, valid, own_lo, n_dev, cap)
+        b2, of2 = _route(plo, phi, cnt, valid & (own_hi != own_lo), own_hi,
+                         n_dev, cap)
+        buck = jnp.concatenate([b1, b2], axis=1)  # [n_dev, 2cap, 3]
+        recv = jax.lax.all_to_all(
+            buck, axis_names, split_axis=0, concat_axis=0, tiled=True
+        )
+        glo, ghi, gcnt, gvalid = _aggregate(recv.reshape(-1, 3), v)
+
+        dev = jax.lax.axis_index(axis_names)
+
+        # ---- merge round over owned supernodes --------------------------
+        s_count = jnp.maximum(jnp.sum(state.size > 0).astype(jnp.float32), 2.0)
+        omega_own = jnp.max(jnp.where(gvalid, gcnt, 0.0))
+        omega_all = jax.lax.pmax(omega_own, axis_names)
+        if cfg.cbar_mode == "paper":
+            cbar = 2.0 * log2v + float(np.log2(max(num_edges_global, 2)))
+            cbar = jnp.float32(cbar)
+        else:
+            cbar = 2.0 * jnp.log2(s_count) + jnp.log2(jnp.maximum(omega_all, 2.0))
+
+        owned = _owner_hash(jnp.arange(v, dtype=jnp.int32), salt, n_dev) == dev
+        groups = shingles.build_groups_from_pairs(
+            glo, ghi, gvalid, jnp.where(owned, state.size, 0),
+            jax.random.fold_in(state.rng, dev), cfg.group_size,
+        )
+        pt = PairTable(lo=glo, hi=ghi, cnt=gcnt, valid=gvalid)
+        gt = tables.build_group_tables(
+            pt, state, groups, cfg.max_neighbors, cfg.union_size, cbar, v
+        )
+        rel, _ = kops.merge_gain(
+            gt.m, gt.n, gt.s, gt.t, gt.n_u, gt.cidx, gt.w, cbar,
+            jnp.float32(log2v),
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+        a, b, sel = select_matching(rel, gt.members, theta)
+        # ownership discipline: only merges between two *owned* supernodes
+        # are valid on this device — trailing groups may contain non-owned
+        # (masked-dead) ids whose sizes are live in the shared tables.
+        a_safe = jnp.clip(a, 0, v - 1)
+        b_safe = jnp.clip(b, 0, v - 1)
+        sel = sel & owned[a_safe] & owned[b_safe]
+        a_all = jax.lax.all_gather(a, axis_names, tiled=True)
+        b_all = jax.lax.all_gather(b, axis_names, tiled=True)
+        sel_all = jax.lax.all_gather(sel, axis_names, tiled=True)
+        new_state, nmerges_g = apply_merges(state, a_all, b_all, sel_all)
+
+        # ---- exact global metrics over lo-owned pairs --------------------
+        mine = gvalid & (_owner_hash(glo, salt, n_dev) == dev)
+        pi = costs.pair_pi(PairTable(lo=glo, hi=ghi, cnt=gcnt, valid=mine),
+                           state.size)
+        touched = (state.size[glo] > 1) | (state.size[ghi] > 1)
+        decided = costs.keep_superedge(gcnt, pi, cbar, jnp.float32(log2v),
+                                       cfg.re_guard)
+        keep = jnp.where(touched, decided, gcnt > 0.0) & mine
+        cntk = jnp.where(keep, gcnt, 0.0)
+        sigma = jnp.where(keep, gcnt / jnp.maximum(pi, 1.0), 0.0)
+        re1_local = jnp.sum(2.0 * cntk * (1.0 - sigma)) + jnp.sum(
+            jnp.where(mine & ~keep, gcnt, 0.0)
+        )
+        p_local = jnp.sum(keep.astype(jnp.float32))
+        w_local = jnp.max(cntk)
+        p_total = jax.lax.psum(p_local, axis_names)
+        w_total = jax.lax.pmax(w_local, axis_names)
+        re1_total = jax.lax.psum(re1_local, axis_names)
+        log2s = jnp.log2(jnp.maximum(s_count, 2.0))
+        log2w = jnp.log2(jnp.maximum(w_total, 2.0))
+        size_bits = p_total * (2.0 * log2s + log2w) + v * log2s
+        denom = float(v) * (v - 1.0)
+        stats = {
+            "size_bits": size_bits,
+            "re1": 2.0 * re1_total / denom,
+            "num_superedges": p_total,
+            "num_supernodes": s_count,
+            "nmerges": nmerges_g,
+            "overflow": jax.lax.psum(of1 + of2, axis_names),
+        }
+        new_state = SummaryState(
+            node2super=new_state.node2super,
+            size=new_state.size,
+            rng=jax.random.fold_in(state.rng, 1729),
+            t=state.t + 1,
+        )
+        return new_state, stats
+
+    spec_e = P(axis_names)
+    spec_r = P()
+    sharded = jax.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
+        out_specs=(spec_r, spec_r),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+def pad_and_shard_edges(src, dst, mesh) -> tuple[jax.Array, jax.Array]:
+    """Pad the edge list to a multiple of the device count (-1 padding)."""
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    e = len(src)
+    pad = (-e) % n_dev
+    src_p = np.concatenate([np.asarray(src, np.int32), np.full(pad, -1, np.int32)])
+    dst_p = np.concatenate([np.asarray(dst, np.int32), np.full(pad, -1, np.int32)])
+    return jnp.asarray(src_p), jnp.asarray(dst_p)
+
+
+# ---------------------------------------------------------------------------
+# Web-scale variant: group-owner sharding with compact neighbor tables
+# ---------------------------------------------------------------------------
+#
+# The first distributed path (above) builds [V, D] neighbor tables on every
+# device — fine through LiveJournal scale, impossible at web-uk-05
+# (39.45 M × 64 × 8 B ≈ 20 GB/device). This variant scales to web-size V:
+#
+#   * candidate groups are computed identically on every device (shingles
+#     from the local edge shard + a pmin over the mesh, then the same
+#     replicated-rng chunking), and device d OWNS groups g ≡ d (mod n_dev);
+#   * pair records are routed to the owner of each endpoint's *group*, so a
+#     device holds the exact adjacency of precisely the supernodes whose
+#     merges it will evaluate — the paper's candidate-set independence is
+#     what makes this ownership exact;
+#   * neighbor tables are built compact ([G_own·C, D], ~40 MB at web scale)
+#     via tables.build_neighbor_tables_compact.
+#
+# Everything else (merge-gain kernel, mutual-best matching, all_gather'd
+# merge application, lo-owner metric reduction) is shared with the simple
+# path. ``dryrun_distributed`` below lowers this step at web-uk-05 scale on
+# the production meshes — EXPERIMENTS.md §Roofline row "ssumm_web".
+
+
+def _local_supernode_shingles(src_l, dst_l, node2super, h, num_nodes):
+    """Per-supernode min-hash from the local edge shard (pmin-able)."""
+    pad = src_l < 0
+    s_safe = jnp.maximum(src_l, 0)
+    d_safe = jnp.maximum(dst_l, 0)
+    sent = jnp.int32(num_nodes)
+    f = h  # closed neighborhood: own hash first
+    f = f.at[jnp.where(pad, sent, s_safe)].min(
+        jnp.where(pad, sent, h[d_safe]), mode="drop")
+    f = f.at[jnp.where(pad, sent, d_safe)].min(
+        jnp.where(pad, sent, h[s_safe]), mode="drop")
+    out = jnp.full((num_nodes,), num_nodes, jnp.int32)
+    out = out.at[node2super].min(f)
+    return out
+
+
+def make_distributed_step_compact(mesh, cfg: SummaryConfig, num_nodes: int,
+                                  num_edges_global: int,
+                                  capacity_factor: float = 4.0,
+                                  lean_sort: bool = False,
+                                  external_groups: bool = False):
+    """One distributed SSumM iteration that scales to web-size |V|.
+
+    ``lean_sort`` selects the 2-key grouping sort (§Perf ssumm iter. 1).
+    ``external_groups``: the step takes a precomputed ``groups_all``
+    ([G_pad, C], from :func:`make_grouping_fn`) as a sixth argument so the
+    grouping can run every ``regroup_every``-th iteration (§Perf iter. C2)."""
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    v = num_nodes
+    c = cfg.group_size
+    g_total = -(-v // c)
+    g_pad = -(-g_total // n_dev) * n_dev
+    g_own = g_pad // n_dev
+    n_rows = g_own * c  # owned supernode slots per device
+    log2v = float(np.log2(max(v, 2)))
+
+    def step(src_l, dst_l, state: SummaryState, theta, salt,
+             groups_in=None):
+        del salt  # ownership re-randomizes through the shingle rng
+        e_loc = src_l.shape[0]
+        cap = int(e_loc * capacity_factor / n_dev) + 8
+        dev = jax.lax.axis_index(axis_names)
+
+        # ---- identical-everywhere candidate groups ----------------------
+        k_h, k_tie, k_next = jax.random.split(state.rng, 3)
+        if groups_in is not None:
+            groups_all = groups_in
+        else:
+            h = jax.random.permutation(k_h, v).astype(jnp.int32)
+            f_loc = _local_supernode_shingles(src_l, dst_l,
+                                              state.node2super, h, v)
+            f = jax.lax.pmin(f_loc, axis_names)
+            if lean_sort:
+                # dead ids already carry the sentinel shingle == V (§Perf)
+                groups_all = shingles.chunk_groups_lean(f, c)
+            else:
+                groups_all = shingles.chunk_groups(f, state.size, k_tie, c)
+            pad_rows = g_pad - groups_all.shape[0]
+            if pad_rows:
+                groups_all = jnp.concatenate(
+                    [groups_all, jnp.full((pad_rows, c), -1, jnp.int32)])
+        # device d owns groups ≡ d (mod n_dev)
+        my_groups = jnp.take(
+            groups_all.reshape(g_pad // n_dev, n_dev, c), dev, axis=1)
+
+        # group-owner of every supernode id
+        flat_members = groups_all.reshape(-1)
+        gidx = jnp.arange(g_pad * c, dtype=jnp.int32) // c
+        owner_of = jnp.zeros((v + 1,), jnp.int32).at[
+            jnp.where(flat_members >= 0, flat_members, v)
+        ].set(gidx % n_dev, mode="drop")[:-1]
+        # owned-slot of every supernode id (-1 = not owned here)
+        my_flat = my_groups.reshape(-1)
+        slot_of = jnp.full((v + 1,), -1, jnp.int32).at[
+            jnp.where(my_flat >= 0, my_flat, v)
+        ].set(jnp.arange(n_rows, dtype=jnp.int32), mode="drop")[:-1]
+
+        # ---- pair exchange to group owners -------------------------------
+        plo, phi, cnt, valid = _local_pairs(src_l, dst_l, state.node2super, v)
+        own_lo = owner_of[jnp.clip(plo, 0, v - 1)]
+        own_hi = owner_of[jnp.clip(phi, 0, v - 1)]
+        b1, of1 = _route(plo, phi, cnt, valid, own_lo, n_dev, cap)
+        b2, of2 = _route(plo, phi, cnt, valid & (own_hi != own_lo), own_hi,
+                         n_dev, cap)
+        buck = jnp.concatenate([b1, b2], axis=1)
+        recv = jax.lax.all_to_all(
+            buck, axis_names, split_axis=0, concat_axis=0, tiled=True
+        )
+        glo, ghi, gcnt, gvalid = _aggregate(recv.reshape(-1, 3), v)
+
+        # ---- compact tables for owned groups ------------------------------
+        s_count = jnp.maximum(jnp.sum(state.size > 0).astype(jnp.float32), 2.0)
+        omega_all = jax.lax.pmax(jnp.max(jnp.where(gvalid, gcnt, 0.0)),
+                                 axis_names)
+        if cfg.cbar_mode == "paper":
+            cbar = jnp.float32(2.0 * log2v
+                               + float(np.log2(max(num_edges_global, 2))))
+        else:
+            cbar = 2.0 * jnp.log2(s_count) + jnp.log2(
+                jnp.maximum(omega_all, 2.0))
+
+        nbr_id, nbr_cnt, self_cnt = tables.build_neighbor_tables_compact(
+            glo, ghi, gcnt, gvalid, slot_of, n_rows, v, cfg.max_neighbors)
+        t_all = tables.supernode_total_costs_compact(
+            glo, ghi, gcnt, gvalid, slot_of, n_rows, v, state.size, cbar,
+            jnp.float32(log2v))
+        gt = tables.assemble_group_tables(
+            nbr_id, nbr_cnt, self_cnt, t_all, state.size, my_groups,
+            row_of_member=slot_of, union_size=cfg.union_size, num_nodes=v)
+        rel, _ = kops.merge_gain(
+            gt.m, gt.n, gt.s, gt.t, gt.n_u, gt.cidx, gt.w, cbar,
+            jnp.float32(log2v),
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret)
+        a, b, sel = select_matching(rel, gt.members, theta)
+        a_all = jax.lax.all_gather(a, axis_names, tiled=True)
+        b_all = jax.lax.all_gather(b, axis_names, tiled=True)
+        sel_all = jax.lax.all_gather(sel, axis_names, tiled=True)
+        new_state, nmerges_g = apply_merges(state, a_all, b_all, sel_all)
+
+        # ---- exact global metrics over lo-owned pairs ---------------------
+        mine = gvalid & (owner_of[jnp.clip(glo, 0, v - 1)] == dev)
+        pi = costs.pair_pi(PairTable(lo=glo, hi=ghi, cnt=gcnt, valid=mine),
+                           state.size)
+        touched = (state.size[jnp.clip(glo, 0, v - 1)] > 1) | (
+            state.size[jnp.clip(ghi, 0, v - 1)] > 1)
+        decided = costs.keep_superedge(gcnt, pi, cbar, jnp.float32(log2v),
+                                       cfg.re_guard)
+        keep = jnp.where(touched, decided, gcnt > 0.0) & mine
+        cntk = jnp.where(keep, gcnt, 0.0)
+        sigma = jnp.where(keep, gcnt / jnp.maximum(pi, 1.0), 0.0)
+        re1_local = jnp.sum(2.0 * cntk * (1.0 - sigma)) + jnp.sum(
+            jnp.where(mine & ~keep, gcnt, 0.0))
+        p_total = jax.lax.psum(jnp.sum(keep.astype(jnp.float32)), axis_names)
+        w_total = jax.lax.pmax(jnp.max(cntk), axis_names)
+        re1_total = jax.lax.psum(re1_local, axis_names)
+        log2s = jnp.log2(jnp.maximum(s_count, 2.0))
+        log2w = jnp.log2(jnp.maximum(w_total, 2.0))
+        size_bits = p_total * (2.0 * log2s + log2w) + v * log2s
+        stats = {
+            "size_bits": size_bits,
+            "re1": 2.0 * re1_total / (float(v) * (v - 1.0)),
+            "num_superedges": p_total,
+            "num_supernodes": s_count,
+            "nmerges": nmerges_g,
+            "overflow": jax.lax.psum(of1 + of2, axis_names),
+        }
+        new_state = SummaryState(
+            node2super=new_state.node2super, size=new_state.size,
+            rng=k_next, t=state.t + 1)
+        return new_state, stats
+
+    spec_e = P(axis_names)
+    spec_r = P()
+    if external_groups:
+        def step_ext(src_l, dst_l, state, theta, salt, groups_all):
+            return step(src_l, dst_l, state, theta, salt, groups_all)
+
+        sharded = jax.shard_map(
+            step_ext, mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r, spec_r),
+            out_specs=(spec_r, spec_r),
+            check_vma=False,
+        )
+    else:
+        sharded = jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
+            out_specs=(spec_r, spec_r),
+            check_vma=False,
+        )
+    return jax.jit(sharded)
+
+
+def make_grouping_fn(mesh, cfg: SummaryConfig, num_nodes: int,
+                     lean_sort: bool = True):
+    """Standalone candidate-grouping program (§Perf ssumm iteration C2).
+
+    The grouping ([V]-sized shingle pmin + sort) is independent of the merge
+    bookkeeping, so it can run every ``regroup_every``-th iteration and be
+    amortized — the paper itself reuses candidate-set structure *within* an
+    iteration (≤10 recursive re-splits before going random), so reusing a
+    grouping for a small number of adjacent iterations is the same kind of
+    coverage/efficiency trade, measured in EXPERIMENTS.md §Perf.
+
+    Returns a jitted fn: (src_l, dst_l, state) → groups_all [G_pad, C]
+    (replicated), with G padded to the mesh device count.
+    """
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    v = num_nodes
+    c = cfg.group_size
+    g_total = -(-v // c)
+    g_pad = -(-g_total // n_dev) * n_dev
+
+    def fn(src_l, dst_l, state: SummaryState):
+        k_h, k_tie, _ = jax.random.split(state.rng, 3)
+        h = jax.random.permutation(k_h, v).astype(jnp.int32)
+        f_loc = _local_supernode_shingles(src_l, dst_l, state.node2super, h, v)
+        f = jax.lax.pmin(f_loc, axis_names)
+        if lean_sort:
+            groups_all = shingles.chunk_groups_lean(f, c)
+        else:
+            groups_all = shingles.chunk_groups(f, state.size, k_tie, c)
+        pad_rows = g_pad - groups_all.shape[0]
+        if pad_rows:
+            groups_all = jnp.concatenate(
+                [groups_all, jnp.full((pad_rows, c), -1, jnp.int32)])
+        return groups_all
+
+    spec_e = P(axis_names)
+    sharded = jax.shard_map(
+        fn, mesh=mesh, in_specs=(spec_e, spec_e, P()), out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(sharded)

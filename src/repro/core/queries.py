@@ -1,0 +1,113 @@
+"""Graph analytics served directly from the summary graph (paper Sect. 1,
+benefit (b) "Analyzable": [3, 19, 28] compute adjacency queries, PageRank,
+triangle density from summaries without reconstruction).
+
+The reconstruction Ĝ (Eq. 1) is *block-constant*: every node pair (u, v)
+with u∈A, v∈B has the same weight σ_AB = w(A,B)/|Π_AB|. All of the queries
+below therefore run in O(|S| + |P|) — supernode space — instead of
+O(|V| + |E|):
+
+  * ``expected_degree`` — E[deg(u)] under Ĝ.
+  * ``pagerank_summary`` — PageRank of Ĝ by power iteration in block space
+    (a block-constant vector stays block-constant under Âᵀ D⁻¹, so the
+    |V|-dimensional iteration collapses exactly to |S| dimensions).
+  * ``triangle_density`` — E[#triangles] of Ĝ from superedge weights.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import SummaryResult
+
+
+def _block_weights(res: SummaryResult):
+    """(ids, sizes, neighbor lists) in compacted supernode space."""
+    ids = np.unique(res.node2super)
+    idx = {int(a): i for i, a in enumerate(ids)}
+    n = res.super_size[ids].astype(np.float64)
+    nbrs: list[list[tuple[int, float]]] = [[] for _ in ids]
+    for lo, hi, w in zip(res.edge_lo, res.edge_hi, res.edge_w):
+        i, j = idx[int(lo)], idx[int(hi)]
+        if i == j:
+            pi = n[i] * (n[i] - 1) / 2.0
+            if pi > 0:
+                nbrs[i].append((i, w / pi))
+        else:
+            pi = n[i] * n[j]
+            nbrs[i].append((j, w / pi))
+            nbrs[j].append((i, w / pi))
+    return ids, idx, n, nbrs
+
+
+def expected_degree(res: SummaryResult, u: int) -> float:
+    ids, idx, n, nbrs = _block_weights(res)
+    a = idx[int(res.node2super[u])]
+    out = 0.0
+    for b, sigma in nbrs[a]:
+        out += sigma * (n[b] - 1.0 if b == a else n[b])
+    return out
+
+
+def pagerank_summary(res: SummaryResult, damping: float = 0.85,
+                     iters: int = 50, tol: float = 1e-10) -> np.ndarray:
+    """PageRank of the reconstructed Ĝ, computed in supernode space.
+
+    Returns the per-*node* PageRank vector (length |V|) — node u's value is
+    its supernode's block value. Dangling blocks (zero expected degree)
+    redistribute uniformly, matching the standard convention.
+    """
+    ids, idx, n, nbrs = _block_weights(res)
+    v_total = float(res.node2super.shape[0])
+    s = len(ids)
+    # expected degree per node of each block
+    deg = np.zeros(s)
+    for a in range(s):
+        for b, sigma in nbrs[a]:
+            deg[a] += sigma * (n[b] - 1.0 if b == a else n[b])
+    p = np.full(s, 1.0 / v_total)  # per-node value, block-constant
+    for _ in range(iters):
+        # mass leaving each node of block B: p_B / deg_B per unit weight
+        share = np.where(deg > 0, p / np.maximum(deg, 1e-300), 0.0)
+        new = np.zeros(s)
+        for a in range(s):
+            acc = 0.0
+            for b, sigma in nbrs[a]:
+                if b == a:
+                    acc += sigma * (n[a] - 1.0) * share[a]
+                else:
+                    acc += sigma * n[b] * share[b]
+            new[a] = acc
+        dangling = float(np.sum(np.where(deg <= 0, p * n, 0.0)))
+        new = (1.0 - damping) / v_total + damping * (new + dangling / v_total)
+        if float(np.max(np.abs(new - p))) < tol:
+            p = new
+            break
+        p = new
+    out = np.zeros(int(v_total))
+    for a_id, i in idx.items():
+        out[res.node2super == a_id] = p[i]
+    return out
+
+
+def triangle_density(res: SummaryResult) -> float:
+    """E[#triangles] of Ĝ (sum over supernode triples of σ products),
+    restricted to the superedge support — O(|P|·deg) like [19]."""
+    ids, idx, n, nbrs = _block_weights(res)
+    s = len(ids)
+    sig = {}
+    for a in range(s):
+        for b, w in nbrs[a]:
+            sig[(a, b)] = w
+    total = 0.0
+    for a in range(s):
+        for b, sab in nbrs[a]:
+            if b <= a:
+                continue
+            for c, sbc in nbrs[b]:
+                if c <= b:
+                    continue
+                sca = sig.get((c, a))
+                if sca is not None:
+                    total += sab * sbc * sca * n[a] * n[b] * n[c]
+    return total

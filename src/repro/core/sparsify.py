@@ -1,0 +1,70 @@
+"""Further sparsification (Sect. 3.2.4): drop superedges until Size(Ḡ) ≤ k.
+
+Vectorized version of the paper's three steps:
+  1. closed-form RE_p increase per kept superedge (footnote 4):
+         ΔRE₁ = (2|E_AB|/|Π_AB| - 1)·|E_AB|      ΔRE₂² = |E_AB|²/|Π_AB|
+  2. the ξ-th smallest increase Δ_ξ via an order statistic
+     (``jnp.sort`` — the paper uses median-of-medians selection; on TPU a
+     bitonic sort of the |P| ≤ |E| deltas is the hardware-native choice),
+  3. drop every superedge with ΔRE ≤ Δ_ξ.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import costs
+from repro.core.types import PairTable, SummaryState
+
+
+def further_sparsify(
+    pt: PairTable,
+    state: SummaryState,
+    num_nodes: int,
+    num_edges: int,
+    k_bits: float,
+    cbar_mode: str = "tight",
+    re_guard: int = 1,
+    error_p: int = 1,
+):
+    """Compute the drop mask that brings Size(Ḡ) within ``k_bits``.
+
+    Returns ``(drop_mask bool[E], metrics_after dict)``.
+    """
+    metrics = costs.summary_metrics(
+        pt, state, num_nodes, num_edges, cbar_mode=cbar_mode, re_guard=re_guard
+    )
+    keep = metrics["keep"]
+    pi = costs.pair_pi(pt, state.size)
+    sigma = pt.cnt / jnp.maximum(pi, 1.0)
+    if error_p == 1:
+        delta = (2.0 * sigma - 1.0) * pt.cnt
+    else:
+        delta = pt.cnt * sigma  # ΔRE₂² — same ordering as ΔRE₂
+
+    # per-superedge storage cost (constant except the ω_max edge — paper note)
+    s_count = jnp.maximum(metrics["num_supernodes"], 2.0)
+    w_max = jnp.maximum(metrics["omega_max"], 2.0)
+    unit = 2.0 * jnp.log2(s_count) + jnp.log2(w_max)
+    over = jnp.maximum(metrics["size_bits"] - k_bits, 0.0)
+    xi = jnp.ceil(over / unit).astype(jnp.int32)
+
+    masked = jnp.where(keep, delta, jnp.inf)
+    order = jnp.sort(masked)
+    p_count = metrics["num_superedges"].astype(jnp.int32)
+    xi_idx = jnp.clip(xi - 1, 0, masked.shape[0] - 1)
+    delta_xi = order[xi_idx]
+    drop = keep & (delta <= delta_xi) & (xi > 0)
+    # degenerate case: dropping everything still can't reach k
+    drop = jnp.where(xi >= p_count, keep, drop)
+
+    after = costs.summary_metrics(
+        pt,
+        state,
+        num_nodes,
+        num_edges,
+        cbar_mode=cbar_mode,
+        re_guard=re_guard,
+        drop_mask=drop,
+    )
+    return drop, after

@@ -1,0 +1,4 @@
+from repro.data.loader import Loader
+from repro.data.tokens import SyntheticTokens, TokenDatasetConfig
+
+__all__ = ["Loader", "SyntheticTokens", "TokenDatasetConfig"]

@@ -1,0 +1,62 @@
+"""Prefetching host→device loader.
+
+One background thread keeps ``prefetch`` batches ahead of the training loop
+(generation + device_put overlap the previous step's compute). The iterator
+is index-based and restartable: ``Loader(ds, start_index=s)`` resumes the
+exact stream after a checkpoint restore.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+import jax
+
+
+class Loader:
+    def __init__(
+        self,
+        batch_fn: Callable[[int], Any],
+        *,
+        start_index: int = 0,
+        prefetch: int = 2,
+        put_fn: Callable[[Any], Any] | None = None,
+    ):
+        self._batch_fn = batch_fn
+        self._put = put_fn or jax.device_put
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._index = start_index
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        i = self._index
+        while not self._stop.is_set():
+            try:
+                batch = self._put(self._batch_fn(i))
+            except BaseException as e:
+                self._q.put(e)
+                return
+            self._q.put((i, batch))
+            i += 1
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return item  # (index, device_batch)
+
+    def close(self) -> None:
+        self._stop.set()
+        # drain so the worker's blocking put releases
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

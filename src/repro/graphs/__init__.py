@@ -1,0 +1,1 @@
+from repro.graphs.synthetic import DATASETS, generate  # noqa: F401

@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: pairwise merge-gain matrices for candidate groups.
+
+This is the compute hot spot of SSumM (DESIGN.md §5): per outer iteration it
+evaluates ``O(Σ_g C²·U)`` fused entropy-cost terms. The kernel processes one
+candidate group per grid step, keeping that group's union-space tables in
+VMEM:
+
+    VMEM working set  ≈ (C·U [m] + C·U [merged] + C·U [mask] + 3·C·C) · 4 B
+    defaults C=64, U=256 → ≈ 0.25 MB  (≪ 16 MB VMEM/core)
+
+Last dims are multiples of 128 so elementwise math vectorizes onto the VPU
+lanes; the arithmetic is branch-free (`where` selects), so the body maps to
+a dense VPU pipeline. The per-pair loop is a ``fori_loop`` over rows ``i``
+with a full ``(C, U)`` vector body — C² scalar iterations are never emitted.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _f_cost(cnt, pi, cbar, log2v):
+    """min(C̄ + entropy bits, explicit bits) — branch-free (Eq. 11/12)."""
+    pi_f = pi.astype(jnp.float32)
+    safe_pi = jnp.maximum(pi_f, 1.0)
+    sigma = jnp.clip(cnt / safe_pi, 0.0, 1.0)
+    xlogx = jnp.where(sigma > 0.0, sigma * jnp.log2(jnp.maximum(sigma, 1e-38)), 0.0)
+    ylogy = jnp.where(
+        sigma < 1.0, (1.0 - sigma) * jnp.log2(jnp.maximum(1.0 - sigma, 1e-38)), 0.0
+    )
+    ent = jnp.where(
+        (pi_f > 0.0) & (cnt > 0.0) & (cnt < pi_f), -pi_f * (xlogx + ylogy), 0.0
+    )
+    c1 = cbar + ent
+    c2 = 2.0 * cnt * log2v
+    return jnp.where(cnt > 0.0, jnp.minimum(c1, c2), 0.0)
+
+
+def _merge_gain_kernel(
+    scal_ref,  # f32[2]            (cbar, log2v)
+    m_ref,  # f32[1, C, U]
+    n_ref,  # f32[1, C]
+    s_ref,  # f32[1, C]
+    t_ref,  # f32[1, C]
+    nu_ref,  # f32[1, U]
+    cidx_ref,  # i32[1, C]
+    w_ref,  # f32[1, C, C]
+    rel_ref,  # f32[1, C, C] out
+    red_ref,  # f32[1, C, C] out
+):
+    cbar = scal_ref[0]
+    log2v = scal_ref[1]
+    m = m_ref[0]  # (C, U)
+    n = n_ref[0]  # (C,)
+    s = s_ref[0]
+    t = t_ref[0]
+    nu = nu_ref[0]  # (U,)
+    cidx = cidx_ref[0]  # (C,)
+    w = w_ref[0]  # (C, C)
+    c = m.shape[0]
+    u = m.shape[1]
+
+    f = functools.partial(_f_cost, cbar=cbar, log2v=log2v)
+
+    # exact-tail bookkeeping (held in registers/VMEM for the whole group)
+    pi_row = n[:, None] * nu[None, :]
+    row_cost = jnp.sum(f(m, pi_row), axis=-1)
+    self_cost = f(s, n * (n - 1.0) * 0.5)
+    tail = jnp.maximum(t - row_cost - self_cost, 0.0)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, u), 1)
+    onehot = (cols == cidx[:, None]).astype(jnp.float32)  # (C, U)
+    jidx = jax.lax.iota(jnp.int32, c)
+
+    def per_row(i, _):
+        mi = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=0)  # (1, U)
+        ohi = jax.lax.dynamic_slice_in_dim(onehot, i, 1, axis=0)  # (1, U)
+        ni = jax.lax.dynamic_slice_in_dim(n, i, 1)[0]
+        si = jax.lax.dynamic_slice_in_dim(s, i, 1)[0]
+        ti = jax.lax.dynamic_slice_in_dim(t, i, 1)[0]
+        tli = jax.lax.dynamic_slice_in_dim(tail, i, 1)[0]
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, axis=0)[0]  # (C,)
+
+        merged_cnt = m + mi  # (C, U)
+        npair = n + ni  # (C,)
+        pi_m = npair[:, None] * nu[None, :]
+        fv = f(merged_cnt, pi_m)
+        mask = 1.0 - onehot - ohi
+        cross = jnp.sum(fv * mask, axis=-1)  # (C,)
+
+        self_m = f(s + si + wi, npair * (npair - 1.0) * 0.5)
+        merged = cross + self_m + tail + tli
+        denom = t + ti - f(wi, n * ni)
+        red_i = denom - merged
+        valid = (n > 0.0) & (ni > 0.0) & (jidx != i) & (denom > 1e-6)
+        rel_i = jnp.where(valid, 1.0 - merged / jnp.maximum(denom, 1e-6), -jnp.inf)
+        red_i = jnp.where(valid, red_i, 0.0)
+        rel_ref[0, pl.dslice(i, 1), :] = rel_i[None, :]
+        red_ref[0, pl.dslice(i, 1), :] = red_i[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, c, per_row, 0)
+
+
+def merge_gain_pallas(
+    m: jax.Array,  # f32[G, C, U]
+    n: jax.Array,
+    s: jax.Array,
+    t: jax.Array,
+    n_u: jax.Array,
+    cidx: jax.Array,
+    w: jax.Array,
+    cbar: jax.Array,
+    log2v: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Grid over groups; one group's tables per program, VMEM resident."""
+    g, c, u = m.shape
+    scal = jnp.stack([cbar.astype(jnp.float32), log2v.astype(jnp.float32)])
+    grid = (g,)
+    specs = [
+        pl.BlockSpec((2,), lambda i: (0,)),  # scalars, replicated
+        pl.BlockSpec((1, c, u), lambda i: (i, 0, 0)),  # m
+        pl.BlockSpec((1, c), lambda i: (i, 0)),  # n
+        pl.BlockSpec((1, c), lambda i: (i, 0)),  # s
+        pl.BlockSpec((1, c), lambda i: (i, 0)),  # t
+        pl.BlockSpec((1, u), lambda i: (i, 0)),  # n_u
+        pl.BlockSpec((1, c), lambda i: (i, 0)),  # cidx
+        pl.BlockSpec((1, c, c), lambda i: (i, 0, 0)),  # w
+    ]
+    out_specs = [
+        pl.BlockSpec((1, c, c), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, c, c), lambda i: (i, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((g, c, c), jnp.float32),
+        jax.ShapeDtypeStruct((g, c, c), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        _merge_gain_kernel,
+        grid=grid,
+        in_specs=specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    rel, red = fn(scal, m, n, s, t, n_u, cidx, w)
+    return rel, red

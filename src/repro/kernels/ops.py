@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels with oracle fallback.
+
+``use_pallas=False`` routes to the pure-jnp oracle in :mod:`repro.kernels.ref`
+(used on CPU hosts and in differential tests). ``interpret=True`` executes
+the Pallas kernel body in Python — the container-level validation mode; set
+False on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.entropy_bits import pair_cost_pallas
+from repro.kernels.merge_gain import merge_gain_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def merge_gain(
+    m, n, s, t, n_u, cidx, w, cbar, log2v, *, use_pallas=True, interpret=True
+):
+    """(rel, red) gain matrices [G, C, C] — Eq. (20)/(17) per candidate pair."""
+    if use_pallas:
+        return merge_gain_pallas(
+            m, n, s, t, n_u, cidx, w, cbar, log2v, interpret=interpret
+        )
+    return ref.merge_gain_ref(m, n, s, t, n_u, cidx, w, cbar, log2v)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pair_cost(cnt, pi, cbar, log2v, *, use_pallas=True, interpret=True):
+    """Optimal per-pair description cost min(C̄+Cost₍₁₎, Cost₍₂₎)."""
+    if use_pallas:
+        return pair_cost_pallas(cnt, pi, cbar, log2v, interpret=interpret)
+    return ref.pair_cost_ref(cnt, pi, cbar, log2v)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: small, obviously-right, fully
+vectorized implementations used by tests (``assert_allclose`` sweeps) and as
+the CPU fallback when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def entropy_bits_ref(cnt: jnp.ndarray, pi: jnp.ndarray) -> jnp.ndarray:
+    """`-|Π|(σlog₂σ+(1-σ)log₂(1-σ))` with 0·log0 := 0 (Eq. 9 sans C̄)."""
+    pi = pi.astype(jnp.float32)
+    cnt = cnt.astype(jnp.float32)
+    sigma = jnp.clip(cnt / jnp.maximum(pi, 1.0), 0.0, 1.0)
+    xlogx = jnp.where(sigma > 0.0, sigma * jnp.log2(jnp.maximum(sigma, 1e-38)), 0.0)
+    ylogy = jnp.where(
+        sigma < 1.0, (1.0 - sigma) * jnp.log2(jnp.maximum(1.0 - sigma, 1e-38)), 0.0
+    )
+    return jnp.where((pi > 0.0) & (cnt > 0.0) & (cnt < pi), -pi * (xlogx + ylogy), 0.0)
+
+
+def pair_cost_ref(
+    cnt: jnp.ndarray, pi: jnp.ndarray, cbar: jnp.ndarray, log2v: jnp.ndarray
+) -> jnp.ndarray:
+    """min(C̄ + Cost₍₁₎, Cost₍₂₎) per pair (Eq. 11/12)."""
+    c1 = cbar + entropy_bits_ref(cnt, pi)
+    c2 = 2.0 * cnt.astype(jnp.float32) * log2v
+    return jnp.where(cnt > 0.0, jnp.minimum(c1, c2), 0.0)
+
+
+def merge_gain_ref(
+    m: jnp.ndarray,  # f32[G, C, U]
+    n: jnp.ndarray,  # f32[G, C]
+    s: jnp.ndarray,  # f32[G, C]
+    t: jnp.ndarray,  # f32[G, C]
+    n_u: jnp.ndarray,  # f32[G, U]
+    cidx: jnp.ndarray,  # i32[G, C]
+    w: jnp.ndarray,  # f32[G, C, C]
+    cbar: jnp.ndarray,  # f32 scalar
+    log2v: jnp.ndarray,  # f32 scalar
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense (G,C,C,U) evaluation of Relative_Reduction (Eq. 20) / Reduction
+    (Eq. 17). Returns ``(rel, red)`` with -inf/-0 on invalid entries."""
+    g, c, u = m.shape
+
+    def f(cnt, pi):
+        return pair_cost_ref(cnt, pi, cbar, log2v)
+
+    # per-member exact-tail bookkeeping
+    pi_row = n[..., None] * n_u[:, None, :]  # [G,C,U]
+    row_cost = jnp.sum(f(m, pi_row), axis=-1)  # [G,C]
+    self_cost = f(s, n * (n - 1.0) * 0.5)
+    tail = jnp.maximum(t - row_cost - self_cost, 0.0)
+
+    onehot = (
+        jnp.arange(u, dtype=jnp.int32)[None, None, :] == cidx[..., None]
+    ).astype(jnp.float32)  # [G,C,U]
+
+    merged_cnt = m[:, :, None, :] + m[:, None, :, :]  # [G,C,C,U]
+    npair = n[:, :, None] + n[:, None, :]  # [G,C,C]
+    pi_m = npair[..., None] * n_u[:, None, None, :]
+    fv = f(merged_cnt, pi_m)
+    mask = 1.0 - onehot[:, :, None, :] - onehot[:, None, :, :]
+    cross = jnp.sum(fv * mask, axis=-1)  # [G,C,C]
+
+    s_m = s[:, :, None] + s[:, None, :] + w
+    self_m = f(s_m, npair * (npair - 1.0) * 0.5)
+    merged = cross + self_m + tail[:, :, None] + tail[:, None, :]
+
+    denom = t[:, :, None] + t[:, None, :] - f(w, n[:, :, None] * n[:, None, :])
+    red = denom - merged
+
+    eye = jnp.eye(c, dtype=bool)[None]
+    valid = (n[:, :, None] > 0) & (n[:, None, :] > 0) & ~eye & (denom > 1e-6)
+    rel = jnp.where(valid, 1.0 - merged / jnp.maximum(denom, 1e-6), -jnp.inf)
+    red = jnp.where(valid, red, 0.0)
+    return rel, red

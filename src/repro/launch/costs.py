@@ -1,0 +1,236 @@
+"""Roofline accounting: HLO costs + analytic scan corrections + collectives.
+
+Three-term roofline per (arch × shape × mesh), v5e constants:
+
+    compute    = FLOPs_corrected / (chips · 197e12)         [bf16]
+    memory     = bytes_corrected / (chips · 819e9)
+    collective = collective_bytes / (chips · 50e9)          [per-link ICI]
+
+``cost_analysis`` counts every ``lax.scan`` body exactly once (measured in
+DESIGN.md §8), so models are built with python-loop layers and the only
+scans left are (a) blockwise-attention q/kv loops, (b) SSD / mLSTM chunk
+loops, (c) the sLSTM time loop. Each has a closed-form FLOP count; the
+correction adds ``true·(1 − 1/trips)`` so the reported compute term is
+exact for matmul work (elementwise/softmax flops inside the scans are
+neglected — they are ≤2% of the matmul flops at these shapes).
+
+Collective bytes are parsed from the *partitioned* (per-device) HLO; op
+factors approximate ring algorithms: all-reduce ×2, all-gather /
+reduce-scatter / all-to-all ×1, collective-permute ×1.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# ---- hardware constants (TPU v5e) -----------------------------------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+# multipliers: forward=1; +2 backward; +1 remat-recompute
+def _mult(mode: str, remat: bool) -> float:
+    if mode == "train":
+        return 4.0 if remat else 3.0
+    return 1.0
+
+
+# ---------------------------------------------------------------------------
+# analytic scan corrections (per family)
+# ---------------------------------------------------------------------------
+
+
+def _attn_instance(b, s, t, heads, hd, mult, q_block=256, kv_block=1024):
+    """(true, counted) matmul FLOPs of one blockwise-attention instance."""
+    fwd = 4.0 * b * heads * s * t * hd
+    true = fwd * mult
+    nq = max(s // min(q_block, s), 1)
+    nk = max(t // min(kv_block, t), 1)
+    return true, true / (nq * nk)
+
+
+def _ssd_instance(cfg: ModelConfig, b, s, mult):
+    di = cfg.ssm_expand * cfg.d_model
+    h = di // cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    nc = max(s // q, 1)
+    fwd = 2.0 * b * s * (q * n + q * h * p + 2.0 * h * n * p + q * h)
+    true = fwd * mult
+    return true, true / nc
+
+
+def _mlstm_instance(cfg: ModelConfig, b, s, mult, chunk=256):
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    p = di // h
+    q = min(chunk, s)
+    nc = max(s // q, 1)
+    fwd = 2.0 * b * s * (3.0 * q * h * p + 3.0 * h * p * p)
+    true = fwd * mult
+    return true, true / nc
+
+
+def _slstm_instance(cfg: ModelConfig, b, s, mult):
+    dh = cfg.d_model // cfg.n_heads
+    fwd = 8.0 * b * s * cfg.d_model * dh  # 4 recurrent matmuls
+    true = fwd * mult
+    return true, true / s
+
+
+def flop_correction(cfg: ModelConfig, sp: ShapeSpec, remat: bool = True) -> float:
+    """FLOPs to ADD to the HLO count (true − counted over all scan bodies)."""
+    mode = sp.kind
+    if mode == "decode":
+        return 0.0  # decode paths are scan-free
+    b, s = sp.global_batch, sp.seq_len
+    mult = _mult("train" if mode == "train" else "prefill", remat)
+    add = 0.0
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        t_len = s
+        true, counted = _attn_instance(b, s, t_len, cfg.n_heads, cfg.hd, mult)
+        add += cfg.n_layers * (true - counted)
+    elif cfg.family == "encdec":
+        e = cfg.enc_len
+        tr, ct = _attn_instance(b, e, e, cfg.n_heads, cfg.hd, mult)
+        add += cfg.enc_layers * (tr - ct)  # encoder self
+        tr, ct = _attn_instance(b, s, s, cfg.n_heads, cfg.hd, mult)
+        add += cfg.n_layers * (tr - ct)  # decoder self
+        tr, ct = _attn_instance(b, s, e, cfg.n_heads, cfg.hd, mult)
+        add += cfg.n_layers * (tr - ct)  # cross
+    elif cfg.family == "hybrid":
+        tr, ct = _ssd_instance(cfg, b, s, mult)
+        add += cfg.n_layers * (tr - ct)
+        n_sites = cfg.n_layers // max(cfg.attn_every, 1)
+        tr, ct = _attn_instance(b, s, s, cfg.n_heads, cfg.hd, mult)
+        add += n_sites * (tr - ct)
+    elif cfg.family == "xlstm":
+        n_m = (cfg.n_layers + 1) // 2
+        n_s = cfg.n_layers // 2
+        tr, ct = _mlstm_instance(cfg, b, s, mult)
+        add += n_m * (tr - ct)
+        tr, ct = _slstm_instance(cfg, b, s, mult)
+        add += n_s * (tr - ct)
+    return add
+
+
+def bytes_correction(cfg: ModelConfig, sp: ShapeSpec, remat: bool = True) -> float:
+    """Approximate HBM-bytes to add for scan-hidden KV/chunk re-reads."""
+    if sp.kind == "decode":
+        return 0.0
+    b, s = sp.global_batch, sp.seq_len
+    mult = _mult("train" if sp.kind == "train" else "prefill", remat)
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        # blockwise attention re-reads K/V once per q-block
+        nq = max(s // 256, 1)
+        layers = cfg.n_layers if cfg.family != "encdec" else cfg.n_layers + cfg.enc_layers
+        kv = 2.0 * s * cfg.n_kv_heads * cfg.hd * 2.0  # bytes, bf16
+        return layers * b * nq * kv * mult
+    return 0.0
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ModelConfig, sp: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    if sp.kind == "train":
+        return 6.0 * n_active * sp.global_batch * sp.seq_len
+    if sp.kind == "prefill":
+        return 2.0 * n_active * sp.global_batch * sp.seq_len
+    return 2.0 * n_active * sp.global_batch  # decode: one token / sequence
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parser (partitioned HLO text)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\([^=]*?\)|[a-z0-9\[\],{}: ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_OP_FACTOR = {
+    "all-reduce": 2.0,  # ring: 2(n-1)/n ≈ 2
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective traffic by op kind (ring-algorithm factors)."""
+    out: dict[str, float] = {k: 0.0 for k in _OP_FACTOR}
+    out["total"] = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        b = _shape_bytes(shapes) * _OP_FACTOR[op]
+        out[op] += b
+        out["total"] += b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline assembly
+# ---------------------------------------------------------------------------
+
+
+def roofline(
+    *,
+    hlo_flops_per_dev: float,
+    hlo_bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    cfg: ModelConfig,
+    sp: ShapeSpec,
+    n_chips: int,
+    remat: bool = True,
+) -> dict[str, Any]:
+    flops_total = hlo_flops_per_dev * n_chips + flop_correction(cfg, sp, remat)
+    bytes_total = hlo_bytes_per_dev * n_chips + bytes_correction(cfg, sp, remat)
+    t_compute = flops_total / (n_chips * PEAK_FLOPS)
+    t_memory = bytes_total / (n_chips * HBM_BW)
+    t_coll = coll_bytes_per_dev / ICI_BW  # per-device traffic on its links
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, sp)
+    t_model = mf / (n_chips * PEAK_FLOPS)
+    step_time = max(terms.values())
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_total": flops_total,
+        "useful_ratio": mf / max(flops_total, 1.0),
+        "roofline_fraction": t_model / max(step_time, 1e-12),
+        "step_time_bound_s": step_time,
+    }

@@ -1,0 +1,379 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every assigned
+(architecture × input shape) on the production meshes and record the
+roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh pod      # 16×16 only
+    PYTHONPATH=src python -m repro.launch.dryrun --summary       # table only
+
+Artifacts: one JSON per cell under ``artifacts/dryrun/`` holding
+``memory_analysis()``, ``cost_analysis()``, and the per-device collective
+bytes parsed from the compiled HLO — EXPERIMENTS.md §Dry-run/§Roofline read
+these. Completed cells are skipped (resumable); use ``--force`` to redo.
+"""
+
+# The container exposes ONE real CPU device; the dry-run needs 512
+# placeholder devices for the production meshes. Must precede ANY jax
+# import (jax locks the device count on first init).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, applicable_shapes, get_config
+from repro.dist.sharding import make_rules
+from repro.launch import costs as rcosts
+from repro.launch.lowering import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh, mesh_device_count
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def apply_variants(cfg, mesh, shape, variants: dict):
+    """Perf-iteration knobs: patch the config / sharding rules.
+
+    Supported keys:
+      moe_impl=a2a|gspmd      — MoE dispatch path (models/moe.py)
+      seq=model|none          — activation sequence axis (serve SP)
+      kvseq=model|none        — decode cache sharding axis
+      batch=...               — e.g. batch=data,model for wider DP
+      remat=0|1
+    """
+    import dataclasses
+
+    from repro.configs.base import SHAPES
+
+    rules = None
+    overrides = {}
+    for key, val in variants.items():
+        if key == "moe_impl" and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, impl=val))
+        elif key in ("seq", "kvseq", "batch", "act_embed", "embed",
+                     "attn_embed", "heads", "kv_heads", "ff", "vocab",
+                     "experts"):
+            if val == "none":
+                overrides[key] = None
+            else:
+                parts = tuple(val.split("+"))
+                overrides[key] = parts if len(parts) > 1 else parts[0]
+    if overrides:
+        sp = SHAPES[shape]
+        mode = "train" if sp.kind == "train" else "serve"
+        rules = make_rules(mesh, mode, overrides=overrides)
+    return cfg, rules
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             force: bool = False, remat: bool = True,
+             tag: str = "", variants: dict | None = None) -> dict:
+    """Lower+compile one cell; returns (and persists) the record."""
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh_device_count(mesh)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "n_devices": n_dev,
+        "status": "error", "tag": tag, "variants": variants or {},
+    }
+    try:
+        rules = None
+        if variants:
+            cfg, rules = apply_variants(cfg, mesh, shape, variants)
+            rv = variants.get("remat")
+            if rv is not None:
+                remat = {"none": False, "full": True}.get(rv, rv)
+        t0 = time.time()
+        cell = build_cell(cfg, shape, mesh, remat=remat, rules=rules)
+        lowered = lower_cell(cell)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = rcosts.collective_bytes(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        rec["roofline"] = rcosts.roofline(
+            hlo_flops_per_dev=rec["cost"]["flops"],
+            hlo_bytes_per_dev=rec["cost"]["bytes_accessed"],
+            coll_bytes_per_dev=rec["collectives"]["total"],
+            # "dots" saves attention matmuls → backward does not rerun
+            # them; the analytic scan correction must then use mult=3
+            cfg=cfg, sp=cell.sp, n_chips=n_dev,
+            remat=(remat is True or remat == "full"),
+        )
+        rec["status"] = "ok"
+        del compiled, lowered, cell
+    except Exception as e:  # recorded, not raised — the sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_ssumm_cell(dataset: str, mesh_kind: str, out_dir: str,
+                   force: bool = False, group_size: int = 64,
+                   tag: str = "", lean_sort: bool = False,
+                   regroup_every: int = 0) -> dict:
+    """Lower+compile one *distributed SSumM iteration* at web scale — the
+    paper-representative roofline cell (DESIGN.md §7; compact group-owner
+    sharding). MODEL_FLOPS here = the merge-gain scoring arithmetic
+    (G·C²·(14·U+10) per iteration), the algorithm's useful work."""
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"ssumm_{dataset}__iteration__{mesh_kind}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    import jax.numpy as jnp
+
+    from repro.core.distributed import make_distributed_step_compact
+    from repro.core.types import SummaryConfig
+    from repro.graphs import DATASETS
+
+    spec = DATASETS[dataset]
+    v, e = spec.v, spec.e_target
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh_device_count(mesh)
+    e_pad = -(-e // n_dev) * n_dev
+    cfg = SummaryConfig(group_size=group_size, use_pallas=False)
+    rec = {
+        "arch": f"ssumm_{dataset}", "shape": "iteration", "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "n_devices": n_dev, "V": v, "E": e,
+        "status": "error", "tag": tag,
+    }
+    try:
+        split = regroup_every > 1
+        step = make_distributed_step_compact(mesh, cfg, v, e,
+                                             lean_sort=lean_sort,
+                                             external_groups=split)
+        i32, u32, f32 = jnp.int32, jnp.uint32, jnp.float32
+        from repro.core.types import SummaryState
+
+        state_s = SummaryState(
+            node2super=jax.ShapeDtypeStruct((v,), i32),
+            size=jax.ShapeDtypeStruct((v,), i32),
+            rng=jax.ShapeDtypeStruct((2,), u32),
+            t=jax.ShapeDtypeStruct((), i32),
+        )
+        g_total = -(-v // group_size)
+        g_pad = -(-g_total // n_dev) * n_dev
+        step_args = [
+            jax.ShapeDtypeStruct((e_pad,), i32),
+            jax.ShapeDtypeStruct((e_pad,), i32),
+            state_s,
+            jax.ShapeDtypeStruct((), f32),
+            jax.ShapeDtypeStruct((), u32),
+        ]
+        if split:
+            step_args.append(jax.ShapeDtypeStruct((g_pad, group_size), i32))
+        t0 = time.time()
+        with mesh:
+            lowered = step.lower(*step_args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bts = float(ca.get("bytes accessed", 0.0))
+        hlo = compiled.as_text()
+        coll = rcosts.collective_bytes(hlo)
+        rec["cost"] = {"flops": flops, "bytes_accessed": bts}
+        rec["collectives"] = coll
+        if split:
+            # amortize the standalone grouping program over regroup_every
+            from repro.core.distributed import make_grouping_fn
+
+            gfn = make_grouping_fn(mesh, cfg, v, lean_sort=lean_sort)
+            with mesh:
+                gcomp = gfn.lower(*step_args[:3]).compile()
+            gca = gcomp.cost_analysis() or {}
+            gcoll = rcosts.collective_bytes(gcomp.as_text())
+            rec["grouping_cost"] = {
+                "flops": float(gca.get("flops", 0.0)),
+                "bytes_accessed": float(gca.get("bytes accessed", 0.0)),
+                "collective_bytes": gcoll["total"],
+                "regroup_every": regroup_every,
+            }
+            flops += rec["grouping_cost"]["flops"] / regroup_every
+            bts += rec["grouping_cost"]["bytes_accessed"] / regroup_every
+            coll = dict(coll)
+            coll["total"] += gcoll["total"] / regroup_every
+            del gcomp
+        g_total = -(-v // group_size)
+        useful = g_total * group_size**2 * (14.0 * cfg.union_size + 10.0)
+        t_c = flops / rcosts.PEAK_FLOPS
+        t_m = bts / rcosts.HBM_BW
+        t_l = coll["total"] / rcosts.ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+        rec["roofline"] = {
+            "t_compute": t_c, "t_memory": t_m, "t_collective": t_l,
+            "bottleneck": max(terms, key=terms.get),
+            "model_flops": useful,
+            "hlo_flops_total": flops * n_dev,
+            "useful_ratio": useful / max(flops * n_dev, 1.0),
+            "roofline_fraction": (useful / (n_dev * rcosts.PEAK_FLOPS))
+            / max(max(terms.values()), 1e-12),
+            "step_time_bound_s": max(terms.values()),
+        }
+        rec["status"] = "ok"
+        del compiled, lowered
+    except Exception as exc:
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def iter_cells(archs, shapes_filter=None):
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            if shapes_filter and shape not in shapes_filter:
+                continue
+            yield arch, shape
+
+
+def summarize(out_dir: str) -> None:
+    rows = []
+    for fn in sorted(os.listdir(out_dir)) if os.path.isdir(out_dir) else []:
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            r = json.load(f)
+        if r.get("tag"):
+            continue  # perf-iteration variants are reported in §Perf
+        rows.append(r)
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<9} {'status':<7} "
+           f"{'compile_s':>9} {'t_comp':>9} {'t_mem':>9} {'t_coll':>9} "
+           f"{'bottleneck':<11} {'roofline%':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            print(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<9} ok      "
+                  f"{r.get('compile_s', 0):>9.1f} {rf['t_compute']:>9.2e} "
+                  f"{rf['t_memory']:>9.2e} {rf['t_collective']:>9.2e} "
+                  f"{rf['bottleneck']:<11} {100*rf['roofline_fraction']:>8.1f}%")
+        else:
+            print(f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<9} ERROR   "
+                  f"{r.get('error', '')[:60]}")
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    print(f"\n{n_ok}/{len(rows)} cells ok")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", help="architecture id(s)")
+    ap.add_argument("--shape", action="append", help="input shape(s)")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default="both")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACTS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--summary", action="store_true", help="print table only")
+    ap.add_argument("--tag", default="", help="variant tag for perf iterations")
+    ap.add_argument("--variant", action="append", default=[],
+                    help="perf knob key=value (see apply_variants)")
+    ap.add_argument("--ssumm", default="",
+                    help="dataset name: dry-run the distributed SSumM "
+                         "iteration instead of LM cells (e.g. web-uk-05)")
+    ap.add_argument("--ssumm-group-size", type=int, default=64)
+    args = ap.parse_args()
+    variants = dict(v.split("=", 1) for v in args.variant)
+
+    if args.summary:
+        summarize(args.out)
+        return
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 host devices, got {jax.device_count()} — "
+        "XLA_FLAGS was set too late"
+    )
+    archs = args.arch or ARCHS
+    meshes = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+    failures = []
+    if args.ssumm:
+        for mesh_kind in meshes:
+            t0 = time.time()
+            rec = run_ssumm_cell(args.ssumm, mesh_kind, args.out,
+                                 force=args.force,
+                                 group_size=args.ssumm_group_size,
+                                 tag=args.tag,
+                                 lean_sort=("lean_sort" in variants),
+                                 regroup_every=int(variants.get(
+                                     "regroup_every", 0)))
+            print(f"[{time.strftime('%H:%M:%S')}] ssumm_{args.ssumm} "
+                  f"{mesh_kind}: {rec['status']} ({time.time()-t0:.0f}s)",
+                  flush=True)
+            if rec["status"] != "ok":
+                print(rec.get("error"))
+                failures.append(("ssumm", args.ssumm, mesh_kind))
+        if failures:
+            raise SystemExit(1)
+        return
+    for arch, shape in iter_cells(archs, args.shape):
+        for mesh_kind in meshes:
+            t0 = time.time()
+            rec = run_cell(arch, shape, mesh_kind, args.out,
+                           force=args.force, remat=not args.no_remat,
+                           tag=args.tag, variants=variants)
+            status = rec["status"]
+            print(f"[{time.strftime('%H:%M:%S')}] {arch} {shape} {mesh_kind}: "
+                  f"{status} ({time.time()-t0:.0f}s)", flush=True)
+            if status != "ok":
+                failures.append((arch, shape, mesh_kind, rec.get("error")))
+    summarize(args.out)
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", *f)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

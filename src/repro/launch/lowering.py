@@ -1,0 +1,134 @@
+"""Cell lowering: (arch × shape × mesh) → jitted step with full shardings.
+
+Shared by the dry-run driver (lower + compile only), the roofline/perf
+harness, and the real train/serve drivers (same shardings, real arrays).
+
+A *cell* is one (ModelConfig, ShapeSpec, Mesh) triple; ``lower_cell``
+assembles the parameter/optimizer/batch shardings from the logical-axis
+trees and returns the ``jax.stages.Lowered`` plus everything needed to
+interpret its cost analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeSpec
+from repro.dist.sharding import MeshRules, make_rules
+from repro.models.api import Model, build_model, input_specs
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    sp: ShapeSpec
+    mesh: Any
+    rules: MeshRules
+    model: Model
+    step_fn: Any  # the function that was lowered
+    arg_structs: tuple  # eval_shape inputs
+    arg_shardings: tuple
+
+
+def _tree_shardings(rules: MeshRules, structs, axes):
+    return jax.tree.map(
+        lambda s, a: rules.sharding(a, s.shape),
+        structs,
+        axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _batch_shardings(rules: MeshRules, batch):
+    def one(s):
+        if len(s.shape) == 2:
+            logical = ("batch", "seq")
+        elif len(s.shape) == 3:
+            logical = ("batch", "seq", None)
+        else:
+            logical = ("batch",)
+        return rules.sharding(logical, s.shape)
+
+    return jax.tree.map(one, batch, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: str | ShapeSpec,
+    mesh,
+    *,
+    run: RunConfig | None = None,
+    remat: bool = True,
+    rules: MeshRules | None = None,
+) -> Cell:
+    sp = SHAPES[shape] if isinstance(shape, str) else shape
+    mode = "train" if sp.kind == "train" else "serve"
+    rules = rules or make_rules(mesh, mode)
+    model = build_model(cfg)
+    run = run or RunConfig()
+
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    axes = model.axes()
+    p_shard = _tree_shardings(rules, params_s, axes)
+    batch = input_specs(cfg, sp.name)
+
+    if sp.kind == "train":
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        o_shard = type(opt_s)(
+            step=rules.sharding((), ()),
+            mu=_tree_shardings(rules, opt_s.mu, axes),
+            nu=_tree_shardings(rules, opt_s.nu, axes),
+        )
+        b_shard = _batch_shardings(rules, batch)
+
+        def step(params, opt, b):
+            return model.train_step(params, opt, b, rules, run, remat=remat)
+
+        return Cell(cfg, sp, mesh, rules, model, step,
+                    (params_s, opt_s, batch), (p_shard, o_shard, b_shard))
+
+    if sp.kind == "decode":
+        cache_axes = model.cache_axes()
+        b_shard = {
+            "token": rules.sharding(("batch",), (sp.global_batch,)),
+            "pos": rules.sharding((), ()),
+            "cache": jax.tree.map(
+                lambda s, a: rules.sharding(a, s.shape),
+                batch["cache"], cache_axes,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+        }
+
+        def step(params, b):
+            return model.serve_step(params, b, rules)
+
+        return Cell(cfg, sp, mesh, rules, model, step,
+                    (params_s, batch), (p_shard, b_shard))
+
+    # prefill
+    b_shard = _batch_shardings(rules, batch)
+
+    def step(params, b):
+        return model.prefill_step(params, b, rules)
+
+    return Cell(cfg, sp, mesh, rules, model, step,
+                (params_s, batch), (p_shard, b_shard))
+
+
+def lower_cell(cell: Cell, *, donate: bool = True):
+    """Lower the cell's step under its mesh. Zero device allocation."""
+    donate_argnums: tuple = ()
+    if donate:
+        # params+opt for train (in-place update), cache holder for decode
+        donate_argnums = (0, 1) if cell.sp.kind == "train" else ()
+    jitted = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.arg_shardings,
+        donate_argnums=donate_argnums,
+    )
+    with cell.mesh:
+        return jitted.lower(*cell.arg_structs)

@@ -1,0 +1,204 @@
+"""Batched serving driver: prefill + decode with a static-batch scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_14b --smoke \
+        --requests 8 --prompt-len 32 --gen-len 32
+
+Serving path of the same Model API the dry-run lowers (`prefill_step` /
+`serve_step`); the scheduler packs requests into fixed slots (static shapes
+⇒ one compilation), tracks per-slot positions, refills finished slots from
+the queue (continuous batching), and samples greedily. TP/flash-decoding
+shardings come from the same `make_rules(mesh, "serve")` table as the
+dry-run cells.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.dist.sharding import make_rules
+from repro.models.api import build_model
+from repro.runtime import make_mesh_from_plan, plan_mesh
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 [L]
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class BatchServer:
+    """Fixed-slot continuous-batching server over the Model API.
+
+    Slots advance **independently** (per-slot decode positions — the decode
+    paths accept an int32[B] position vector), so a request can be admitted
+    into a free slot mid-flight without synchronizing the other slots:
+    during admission the new slot teacher-forces its prompt while occupied
+    slots keep their frozen position (their cache line is rewritten by their
+    own next real token, so no state leaks between requests)."""
+
+    def __init__(self, cfg, *, slots: int, max_len: int, rules=None, seed=0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.rules = rules
+        self.slots = slots
+        self.max_len = max_len
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        # de-alias: XLA may dedupe identical zero buffers across cache
+        # leaves, which breaks donation (same buffer donated twice)
+        self.cache = jax.tree.map(
+            lambda x: jnp.array(x, copy=True), self.model.init_cache(slots, max_len)
+        )
+        self.pos = np.zeros(slots, np.int32)  # next position per slot
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+        def decode(params, cache, token, pos):
+            return self.model.serve_step(
+                params, {"token": token, "pos": pos, "cache": cache}, rules
+            )
+
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        # slot-masked cache restore: keep `new` where mask else `old`
+        # (recurrent families update state irreversibly — admissions must
+        # not advance other slots' SSM/mLSTM states)
+        def restore(new, old, mask):
+            def one(n, o):
+                m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+                return jnp.where(m, n, o)
+
+            return jax.tree.map(one, new, old)
+
+        self._restore = jax.jit(restore)
+
+        # zero one slot's cache/state at admission: KV caches are protected
+        # by position masking, but recurrent (SSM/mLSTM) state would leak
+        # the previous request into the next one
+        def clear(cache, mask):
+            def one(x):
+                m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+                return jnp.where(m, jnp.zeros_like(x), x)
+
+            return jax.tree.map(one, cache)
+
+        self._clear = jax.jit(clear)
+
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _run(self, token: np.ndarray, pos: np.ndarray):
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(token, jnp.int32),
+            jnp.asarray(np.minimum(pos, self.max_len - 1), jnp.int32),
+        )
+        return np.asarray(logits)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                # teacher-force the prompt through the decode path at this
+                # slot's own positions. KV caches of other slots are safe by
+                # masking (their frozen position is rewritten by their own
+                # next token); recurrent state is NOT — snapshot and restore
+                # every slot except s afterwards.
+                mask = jnp.asarray(np.arange(self.slots) == s)
+                self.cache = self._clear(self.cache, mask)
+                snap = jax.tree.map(jnp.copy, self.cache)
+                for i, tok in enumerate(req.prompt):
+                    token = np.zeros(self.slots, np.int32)
+                    token[s] = tok
+                    pos = self.pos.copy()
+                    pos[s] = i
+                    logits = self._run(token, pos)
+                self.cache = self._restore(self.cache, snap, mask)
+                self.pos[s] = len(req.prompt)
+                req.out.append(int(logits[s].argmax()))
+                req.t_first = time.perf_counter()
+
+    def step(self) -> bool:
+        """One decode step for every active slot. Returns False when idle."""
+        self._admit()
+        if all(a is None for a in self.active):
+            return False
+        token = np.zeros(self.slots, np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None and req.out:
+                token[s] = req.out[-1]
+        logits = self._run(token, self.pos)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(logits[s].argmax()))
+            self.pos[s] += 1
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                req.t_done = time.perf_counter()
+                self.done.append(req)
+                self.active[s] = None
+                self.pos[s] = 0  # slot reset for the next admission
+        return True
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2_5_14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    plan = plan_mesh(jax.device_count(), global_batch=args.slots, want_model=1)
+    mesh = make_mesh_from_plan(plan)
+    rules = make_rules(mesh, "serve")
+
+    rng = np.random.default_rng(args.seed)
+    server = BatchServer(cfg, slots=args.slots, max_len=args.max_len,
+                         rules=rules, seed=args.seed)
+    with mesh:
+        for rid in range(args.requests):
+            server.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+                max_new=args.gen_len,
+            ))
+        t0 = time.perf_counter()
+        while server.step():
+            pass
+    wall = time.perf_counter() - t0
+    lat = [r.t_done - r.t_submit for r in server.done]
+    ttft = [r.t_first - r.t_submit for r in server.done]
+    toks = sum(len(r.out) for r in server.done)
+    result = {
+        "arch": cfg.name, "requests": len(server.done),
+        "tokens": toks, "wall_s": wall,
+        "tok_per_s": toks / max(wall, 1e-9),
+        "p50_latency_s": float(np.median(lat)) if lat else None,
+        "p50_ttft_s": float(np.median(ttft)) if ttft else None,
+    }
+    print(json.dumps(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""End-to-end training driver (deliverable b): data pipeline → sharded
+train loop → checkpoint/restart → straggler + preemption handling.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm_350m --smoke \
+        --steps 200 --batch 8 --seq 128
+
+Production features exercised here on any device count (CPU included):
+  * mesh planned from the live device count (elastic restart: relaunch with
+    fewer devices and the same global batch — plan_mesh rescales),
+  * FSDP/TP shardings from the same rule table as the dry-run,
+  * gradient accumulation (``--accum``), optional gradient compression,
+  * atomic keep-N checkpoints with async writes; ``--resume`` restores the
+    latest commit (reshard-on-restore under the *current* mesh),
+  * straggler monitor + SIGTERM-safe preemption checkpoint.
+
+XLA latency-hiding flags (collective/compute overlap on TPU) are set before
+the jax import; they are harmless no-ops on CPU.
+"""
+
+import os
+
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_enable_async_collective_permute=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_overlap_compute_collective_tc=true",
+)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import RunConfig, get_config, get_smoke_config
+from repro.data import SyntheticTokens, TokenDatasetConfig
+from repro.dist import CompressConfig, microbatch_grads
+from repro.dist.sharding import make_rules
+from repro.launch.lowering import _tree_shardings
+from repro.models.api import build_model
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.runtime import (
+    CheckpointManager,
+    PreemptionGuard,
+    StragglerMonitor,
+    make_mesh_from_plan,
+    plan_mesh,
+)
+
+
+def build_train_step(model, rules, run: RunConfig, accum: int):
+    from repro.dist.compress import encode_int8, decode_int8, encode_topk
+
+    def loss_fn(p, b):
+        return model.loss(p, b, rules, remat=run.remat)
+
+    def step_fn(params, opt, batch, err):
+        loss, _aux, grads = microbatch_grads(loss_fn, params, batch, accum)
+        # gradient compression at the (cross-pod) collective boundary:
+        # the quantize→dequantize / sparsify→error-feedback transform is
+        # applied to the gradient tree exactly where the wire format would
+        # sit, so convergence behavior matches the compressed deployment
+        if run.grad_compress == "int8":
+            q, s = encode_int8(grads)
+            grads = decode_int8(q, s)
+        elif run.grad_compress == "topk":
+            grads, err = encode_topk(grads, err, run.topk_ratio)
+        lr = cosine_schedule(opt.step + 1, base_lr=run.lr,
+                             warmup=run.warmup_steps, total=run.total_steps,
+                             min_ratio=run.lr_min_ratio)
+        params, opt, om = adamw_update(
+            grads, opt, params, lr=lr, weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip,
+        )
+        return params, opt, err, {"loss": loss, **om}
+
+    return step_fn
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="xlstm_350m")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress", choices=("none", "topk", "int8"), default="none")
+    ap.add_argument("--want-model", type=int, default=1, help="TP degree cap")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    run = RunConfig(lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 10, 1),
+                    checkpoint_every=args.ckpt_every, grad_compress=args.compress)
+
+    # ---- mesh from the live device count (elastic) -----------------------
+    n_dev = jax.device_count()
+    plan = plan_mesh(n_dev, global_batch=args.batch, want_model=args.want_model)
+    mesh = make_mesh_from_plan(plan)
+    rules = make_rules(mesh, "train")
+    print(f"devices={n_dev} mesh={dict(mesh.shape)} "
+          f"per_device_batch={plan.per_device_batch} accum={plan.accum_steps}")
+
+    # ---- model + sharded init -------------------------------------------
+    model = build_model(cfg)
+    axes = model.axes()
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(args.seed))
+    p_shard = _tree_shardings(rules, params_s, axes)
+    with mesh:
+        params = jax.jit(model.init, out_shardings=p_shard)(
+            jax.random.PRNGKey(args.seed)
+        )
+        opt = adamw_init(params)
+
+    # ---- data -------------------------------------------------------------
+    ds = SyntheticTokens(TokenDatasetConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed,
+    ))
+    b_shard = rules.sharding(("batch", "seq"), (args.batch, args.seq))
+
+    accum = max(args.accum, plan.accum_steps)
+    step_fn = build_train_step(model, rules, run, accum)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
+    from repro.dist.compress import init_error_buffers
+
+    err = init_error_buffers(params) if args.compress == "topk" else None
+
+    # ---- fault tolerance ---------------------------------------------------
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=run.keep_checkpoints)
+        if args.resume and ckpt.latest_step() is not None:
+            (params, opt), start_step, _ = ckpt.restore(
+                (params, opt),
+                sharding_fn=None,  # device_put default; resharded below
+            )
+            with mesh:
+                params = jax.device_put(params, p_shard)
+            print(f"resumed from step {start_step}")
+    guard = PreemptionGuard()
+    monitor = StragglerMonitor()
+    monitor.on_straggler(
+        lambda ev: print(f"  [straggler] step {ev.step}: "
+                         f"{ev.step_time:.2f}s = {ev.ratio:.1f}× mean")
+    )
+
+    # ---- loop --------------------------------------------------------------
+    losses = []
+    t_begin = time.time()
+    with mesh:
+        for step in range(start_step, args.steps):
+            monitor.begin_step()
+            batch = {"tokens": jax.device_put(ds.batch(step), b_shard)}
+            params, opt, err, metrics = jit_step(params, opt, batch, err)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            monitor.end_step(step)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+            if ckpt and ((step + 1) % run.checkpoint_every == 0):
+                ckpt.save_async(step + 1, (params, opt))
+            if guard.preempted:
+                print("preemption signal: saving + exiting")
+                if ckpt:
+                    ckpt.save(step + 1, (params, opt))
+                break
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(args.steps, (params, opt))
+    wall = time.time() - t_begin
+    result = {
+        "arch": cfg.name, "steps": len(losses), "wall_s": wall,
+        "loss_first": losses[0] if losses else None,
+        "loss_last": losses[-1] if losses else None,
+        "stragglers": len(monitor.events),
+    }
+    print(json.dumps(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

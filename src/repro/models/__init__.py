@@ -1,0 +1,1 @@
+# populated by api.py once all families exist

@@ -1,0 +1,267 @@
+"""Unified model API: one entry point for all 10 assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions:
+
+    init(rng)                         → params (+ .axes logical-axis tree)
+    forward(params, batch, rules)     → (logits, aux)          train/prefill
+    loss(params, batch, rules)        → (scalar, metrics)
+    train_step(params, opt, batch, rules, run) → (params, opt, metrics)
+    serve_step(params, batch, rules)  → (logits[B,V], new_cache)  decode
+    init_cache(batch, seq_len)        → decode cache pytree
+    cache_axes()                      → logical axes for the cache
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+input of the step that the shape's kind lowers (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.models import transformer, whisper, xlstm, zamba2
+from repro.models.common import Px, dense_init, split_tree
+from repro.models.losses import causal_lm_loss
+from repro.optim import adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init_px: Callable  # rng -> Px tree
+    forward: Callable  # (params, batch, rules, remat) -> (logits, aux)
+    decode: Callable  # (params, batch, rules) -> (logits, new_cache)
+    init_cache: Callable
+    cache_axes: Callable
+    prefix_len: int = 0
+
+    def init(self, rng):
+        values, _ = split_tree(self.init_px(rng))
+        return values
+
+    def axes(self, rng=None):
+        tree = jax.eval_shape(self.init_px, rng or jax.random.PRNGKey(0))
+        _, axes = split_tree(tree)
+        return axes
+
+    # ---- steps ----------------------------------------------------------
+    def loss(self, params, batch, rules=None, remat: bool = True):
+        logits, aux = self.forward(params, batch, rules, remat)
+        return causal_lm_loss(
+            logits,
+            batch["tokens"],
+            moe_aux=aux.get("moe_aux"),
+            prefix_len=self.prefix_len,
+        )
+
+    def train_step(self, params, opt_state, batch, rules=None, run=None,
+                   remat: bool = True):
+        from repro.configs.base import RunConfig
+
+        run = run or RunConfig()
+
+        def loss_fn(p):
+            return self.loss(p, batch, rules, remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # schedule is evaluated at the step being *taken* (step+1): warmup
+        # starts at lr>0 so the very first update moves the params.
+        lr = cosine_schedule(
+            opt_state.step + 1, base_lr=run.lr, warmup=run.warmup_steps,
+            total=run.total_steps, min_ratio=run.lr_min_ratio,
+        )
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=run.weight_decay, grad_clip=run.grad_clip,
+        )
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    def serve_step(self, params, batch, rules=None):
+        return self.decode(params, batch, rules)
+
+    def prefill_step(self, params, batch, rules=None):
+        """Prefill: full-sequence forward, last-position logits only."""
+        logits, _ = self.forward(params, batch, rules, False, last_only=True)
+        return logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# family assemblies
+# ---------------------------------------------------------------------------
+
+
+def _dense_family(cfg: ModelConfig) -> Model:
+    def fwd(params, batch, rules=None, remat=True, last_only=False):
+        return transformer.forward(params, batch["tokens"], cfg, rules=rules,
+                                   remat=remat, last_only=last_only)
+
+    def dec(params, batch, rules=None):
+        return transformer.decode_step(
+            params, batch["token"], batch["cache"], batch["pos"], cfg, rules=rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_px=lambda rng: transformer.init_lm(rng, cfg, _dtype(cfg)),
+        forward=fwd,
+        decode=dec,
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s, _dtype(cfg)),
+        cache_axes=lambda: transformer.cache_axes(cfg),
+    )
+
+
+def _vlm_family(cfg: ModelConfig) -> Model:
+    def init_px(rng):
+        k1, k2 = jax.random.split(rng)
+        p = transformer.init_lm(k1, cfg, _dtype(cfg))
+        p["img_proj"] = Px(
+            dense_init(k2, (cfg.img_dim, cfg.d_model), 0, _dtype(cfg)),
+            (None, "embed"),
+        )
+        return p
+
+    def fwd(params, batch, rules=None, remat=True, last_only=False):
+        prefix = jnp.einsum(
+            "bti,id->btd", batch["img_emb"].astype(_dtype(cfg)), params["img_proj"]
+        )
+        return transformer.forward(params, batch["tokens"], cfg, rules=rules,
+                                   remat=remat, prefix_emb=prefix,
+                                   last_only=last_only)
+
+    def dec(params, batch, rules=None):
+        return transformer.decode_step(
+            params, batch["token"], batch["cache"], batch["pos"], cfg, rules=rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_px=init_px,
+        forward=fwd,
+        decode=dec,
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s, _dtype(cfg)),
+        cache_axes=lambda: transformer.cache_axes(cfg),
+        prefix_len=cfg.img_tokens,
+    )
+
+
+def _xlstm_family(cfg: ModelConfig) -> Model:
+    def fwd(params, batch, rules=None, remat=True, last_only=False):
+        return xlstm.xlstm_forward(params, batch["tokens"], cfg, rules=rules,
+                                   remat=remat, last_only=last_only)
+
+    def dec(params, batch, rules=None):
+        return xlstm.xlstm_decode_step(
+            params, batch["token"], batch["cache"], batch["pos"], cfg, rules=rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_px=lambda rng: xlstm.init_xlstm_lm(rng, cfg, _dtype(cfg)),
+        forward=fwd,
+        decode=dec,
+        init_cache=lambda b, s: xlstm.init_xlstm_cache(cfg, b, s, _dtype(cfg)),
+        cache_axes=lambda: xlstm.xlstm_cache_axes(cfg),
+    )
+
+
+def _hybrid_family(cfg: ModelConfig) -> Model:
+    def fwd(params, batch, rules=None, remat=True, last_only=False):
+        return zamba2.forward(params, batch["tokens"], cfg, rules=rules,
+                              remat=remat, last_only=last_only)
+
+    def dec(params, batch, rules=None):
+        return zamba2.decode_step(
+            params, batch["token"], batch["cache"], batch["pos"], cfg, rules=rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_px=lambda rng: zamba2.init_zamba2(rng, cfg, _dtype(cfg)),
+        forward=fwd,
+        decode=dec,
+        init_cache=lambda b, s: zamba2.init_cache(cfg, b, s, _dtype(cfg)),
+        cache_axes=lambda: zamba2.cache_axes(cfg),
+    )
+
+
+def _encdec_family(cfg: ModelConfig) -> Model:
+    def fwd(params, batch, rules=None, remat=True, last_only=False):
+        del remat  # whisper blocks are cheap enough; remat handled per-block
+        enc = whisper.encode(params, batch["frames"].astype(_dtype(cfg)), cfg,
+                             rules=rules)
+        logits = whisper.decode_train(params, batch["tokens"], enc, cfg,
+                                      rules=rules, last_only=last_only)
+        return logits, {}
+
+    def dec(params, batch, rules=None):
+        return whisper.decode_step(
+            params, batch["token"], batch["cache"], batch["pos"], cfg, rules=rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_px=lambda rng: whisper.init_whisper(rng, cfg, _dtype(cfg)),
+        forward=fwd,
+        decode=dec,
+        init_cache=lambda b, s: whisper.init_cache(cfg, b, s, _dtype(cfg)),
+        cache_axes=lambda: whisper.cache_axes(cfg),
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+_FAMILIES = {
+    "dense": _dense_family,
+    "moe": _dense_family,  # MoE plugs into the transformer block
+    "vlm": _vlm_family,
+    "xlstm": _xlstm_family,
+    "hybrid": _hybrid_family,
+    "encdec": _encdec_family,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return _FAMILIES[cfg.family](cfg)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, zero allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: str | ShapeSpec) -> dict[str, Any]:
+    """Inputs of the step lowered for this shape (see DESIGN.md §6)."""
+    sp = SHAPES[shape] if isinstance(shape, str) else shape
+    b, s = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+
+    if sp.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_len, cfg.d_model),
+                                                   jnp.bfloat16)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.family == "vlm":
+            batch["img_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.img_tokens, cfg.img_dim), jnp.bfloat16
+            )
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.img_tokens), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+
+    # decode: one new token against a cache of length s
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "token": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,167 @@
+"""GQA/MQA/SWA attention with train, prefill, and cached-decode paths.
+
+Layouts:
+    q        [B, S, H, hd]          k/v  [B, T, K, hd]
+    scores   [B, K, g, S, T]        (g = H // K query groups)
+
+Decode sharding (serve rules): the KV cache sequence axis is mapped to
+"model" — GSPMD partitions the contraction over T and inserts the partial
+softmax combine (flash-decoding) as a psum pair; see DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Px, dense_init, rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, d_model=None, dtype=jnp.bfloat16, bias=None):
+    d = d_model or cfg.d_model
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    use_bias = cfg.qkv_bias if bias is None else bias
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": Px(dense_init(ks[0], (d, h, hd), 0, dtype), ("attn_embed", "heads", None)),
+        "wk": Px(dense_init(ks[1], (d, k, hd), 0, dtype), ("attn_embed", "kv_heads", None)),
+        "wv": Px(dense_init(ks[2], (d, k, hd), 0, dtype), ("attn_embed", "kv_heads", None)),
+        "wo": Px(dense_init(ks[3], (h, hd, d), None, dtype), ("heads", None, "attn_embed")),
+    }
+    if use_bias:
+        p["bq"] = Px(jnp.zeros((h, hd), dtype), ("heads", None))
+        p["bk"] = Px(jnp.zeros((k, hd), dtype), ("kv_heads", None))
+        p["bv"] = Px(jnp.zeros((k, hd), dtype), ("kv_heads", None))
+    return p
+
+
+def _project_qkv(p, x, rules=None):
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _mask(pos_q, pos_k, causal: bool, window, valid_len=None):
+    """[S, T] additive mask. window = sliding-window size (None = full)."""
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= (pos_q[:, None] - pos_k[None, :]) < window
+    if valid_len is not None:
+        m &= pos_k[None, :] < valid_len
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def mha(q, k, v, mask, rules=None):
+    """Grouped attention core; softmax in f32."""
+    b, s, h, hd = q.shape
+    kk = k.shape[2]
+    g = h // kk
+    q = q.reshape(b, s, kk, g, hd)
+    scores = jnp.einsum("bskgx,btkx->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = scores + mask  # broadcast [S, T]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkx->bskgx", w.astype(v.dtype), v)
+    return out.reshape(b, s, h * hd)
+
+
+def attention(
+    p,
+    x,
+    cfg,
+    *,
+    positions=None,
+    causal: bool = True,
+    window=None,
+    rules=None,
+    use_rope: bool = True,
+):
+    """Full-sequence attention (train / prefill) — blockwise online-softmax
+    (see models/flash.py; full scores are never materialized)."""
+    from repro.models.flash import blockwise_attention
+
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, rules)
+    pos = positions if positions is not None else jnp.arange(s)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    if rules is not None:
+        q = rules.constrain(q, "batch", "seq", "heads", None)
+        k = rules.constrain(k, "batch", "seq", "kv_heads", None)
+        v = rules.constrain(v, "batch", "seq", "kv_heads", None)
+    out = blockwise_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsy,yd->bsd", out, p["wo"].reshape(-1, p["wo"].shape[-1]))
+
+
+def attention_decode(
+    p,
+    x,
+    cfg,
+    cache_k,
+    cache_v,
+    pos,  # int32 scalar OR int32[B]: per-sequence index of the new token
+    *,
+    window=None,
+    rules=None,
+    use_rope: bool = True,
+):
+    """One-token decode against a pre-filled KV cache.
+
+    cache_k/v: [B, T, K, hd]. ``pos`` may be a scalar (lockstep decode — the
+    dry-run serving shape) or a per-sequence vector (continuous batching:
+    each slot advances independently). Returns (out [B, 1, d], new_k, new_v).
+    """
+    b, t, kk, hd = cache_k.shape
+    q, k_new, v_new = _project_qkv(p, x, rules)  # S = 1
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # [B]
+    if use_rope:
+        q = rope(q, posv[:, None], cfg.rope_theta)
+        k_new = rope(k_new, posv[:, None], cfg.rope_theta)
+    idx = jnp.arange(b)
+    cache_k = cache_k.at[idx, posv].set(k_new[:, 0])
+    cache_v = cache_v.at[idx, posv].set(v_new[:, 0])
+    if rules is not None:
+        cache_k = rules.constrain(cache_k, "batch", "kvseq", "kv_heads", None)
+        cache_v = rules.constrain(cache_v, "batch", "kvseq", "kv_heads", None)
+    pos_k = jnp.arange(t)
+    # per-sequence causal (+ window) mask: [B, 1, 1, 1, T] broadcast over
+    # the [B, K, g, S, T] score layout
+    m = pos_k[None, :] <= posv[:, None]
+    if window is not None:
+        m &= (posv[:, None] - pos_k[None, :]) < window
+    mask = jnp.where(m, 0.0, NEG_INF)[:, None, None, None, :]
+    out = mha(q, cache_k, cache_v, mask, rules)
+    out = jnp.einsum("bsy,yd->bsd", out, p["wo"].reshape(-1, p["wo"].shape[-1]))
+    return out, cache_k, cache_v
+
+
+def cross_attention(p, x, kv_cache_k, kv_cache_v, rules=None):
+    """Encoder-decoder cross attention (whisper): cache is the projected
+    encoder output; no masking, no RoPE."""
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    t = kv_cache_k.shape[1]
+    mask = jnp.zeros((x.shape[1], t), jnp.float32)
+    out = mha(q, kv_cache_k, kv_cache_v, mask, rules)
+    return jnp.einsum("bsy,yd->bsd", out, p["wo"].reshape(-1, p["wo"].shape[-1]))
+
+
+def project_cross_kv(p, enc_out):
+    k = jnp.einsum("btd,dkx->btkx", enc_out, p["wk"])
+    v = jnp.einsum("btd,dkx->btkx", enc_out, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v

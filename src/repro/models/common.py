@@ -1,0 +1,152 @@
+"""Shared model building blocks: params-with-axes, norms, RoPE, MLPs.
+
+Parameters are plain nested dicts of ``jax.Array``. A parallel *axes* tree
+(same structure, leaves = tuples of logical axis names) drives sharding; both
+trees are built together by the ``init_*`` functions through ``Px``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Px:
+    """A parameter leaf paired with its logical sharding axes."""
+
+    value: jax.Array
+    axes: tuple
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+
+# registered as a pytree (axes = aux data) so init functions can run under
+# jax.eval_shape — the dry-run derives parameter ShapeDtypeStructs + logical
+# axes without allocating anything.
+jax.tree_util.register_pytree_node(
+    Px,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Px(children[0], axes),
+)
+
+
+def split_tree(tree):
+    """Split a Px-leafed tree into (values, axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=lambda x: isinstance(x, Px))
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, Px))
+    return values, axes
+
+
+def param_count(values) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(values)))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16) -> jax.Array:
+    fan_in = shape[in_axis] if in_axis is not None else int(np.prod(shape[:-1]))
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (params in f32, math in f32, cast back)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(key, d, kind: str = "rmsnorm"):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": Px(jnp.zeros((d,), jnp.float32), (None,))}
+    return {
+        "scale": Px(jnp.ones((d,), jnp.float32), (None,)),
+        "bias": Px(jnp.zeros((d,), jnp.float32), (None,)),
+    }
+
+
+def apply_norm(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Apply RoPE. x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(half, dtype=jnp.float32) / half
+    inv = theta**-freq  # [half]
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq_len: int, d: int):
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d, f, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": Px(dense_init(k1, (d, f), 0, dtype), ("embed", "ff")),
+        "wg": Px(dense_init(k2, (d, f), 0, dtype), ("embed", "ff")),
+        "wo": Px(dense_init(k3, (f, d), 0, dtype), ("ff", "embed")),
+    }
+
+
+def apply_mlp(p, x, act: str = "silu", rules=None):
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    if act == "gelu":
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

@@ -1,0 +1,119 @@
+"""Blockwise (flash-style) attention in pure JAX for long sequences.
+
+Materializing [B, H, S, T] scores at 32k–500k sequence lengths is impossible
+(43 GB+/device), so train/prefill attention runs the online-softmax blocked
+algorithm: an outer ``lax.scan`` over query blocks and an inner ``lax.scan``
+over KV blocks, carrying (running max, denominator, accumulator). Peak live
+memory is one [B, heads, q_block, kv_block] score tile.
+
+Roofline note (EXPERIMENTS.md §Roofline): XLA's ``cost_analysis`` counts a
+scan body exactly once, so HLO FLOPs undercount attention by the factor
+``nq·nkv``. The dry-run extractor adds the analytic correction
+``F_attn·(1 − 1/(nq·nkv))`` — formulas in launch/costs.py; everything
+outside these scans is loop-free and exactly counted.
+
+Causal block skipping is intentionally NOT performed (all blocks computed,
+masked) so the analytic correction stays exact; the §Perf hillclimb measures
+the causal-skip variant separately.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fit_block(n: int, want: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``want`` (sequences like whisper's
+    1500 frames don't divide the default power-of-two blocks)."""
+    if n <= want:
+        return n
+    if n % want == 0:
+        return want
+    return max(d for d in range(1, want + 1) if n % d == 0)
+
+
+def blockwise_attention(
+    q,  # [B, S, H, hd]
+    k,  # [B, T, K, hd]
+    v,  # [B, T, K, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 256,
+    kv_block: int = 1024,
+    q_offset: int = 0,  # position of q[0] (prefill continuation)
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    t, kk = k.shape[1], k.shape[2]
+    g = h // kk
+    qb = _fit_block(s, q_block)
+    kb = _fit_block(t, kv_block)
+    nq, nk = s // qb, t // kb
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    q_r = q.reshape(b, nq, qb, kk, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    k_r = k.reshape(b, nk, kb, kk, hd).transpose(1, 0, 2, 3, 4)
+    v_r = v.reshape(b, nk, kb, kk, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi):
+        q_blk, iq = qi  # [B, qb, K, g, hd], scalar block index
+        pos_q = q_offset + iq * qb + jnp.arange(qb)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk, v_blk, jk = kj
+            pos_k = jk * kb + jnp.arange(kb)
+            s_blk = (
+                jnp.einsum("bqkgx,btkx->bkgqt", q_blk, k_blk).astype(jnp.float32)
+                * scale
+            )
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= pos_q[:, None] >= pos_k[None, :]
+            if window is not None:
+                mask &= (pos_q[:, None] - pos_k[None, :]) < window
+            s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkx->bkgqx", p, v_blk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kk, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kk, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, kk, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (k_r, v_r, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B, K, g, qb, hd]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qb, h, hd)
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (q_r, jnp.arange(nq)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def attention_flops(
+    b: int, s: int, t: int, h: int, hd: int, *, mode: str, remat: bool
+) -> tuple[float, float]:
+    """(true, hlo-counted) attention matmul FLOPs for the roofline correction.
+
+    fwd = 4·B·H·S·T·hd (QKᵀ + PV). train: bwd = 2·fwd, remat adds 1 fwd.
+    Counted-by-HLO = true / (nq·nkv) with the default block sizes.
+    """
+    fwd = 4.0 * b * h * s * t * hd
+    if mode == "train":
+        mult = 4.0 if remat else 3.0
+    else:
+        mult = 1.0
+    true = fwd * mult
+    qb = min(256, s)
+    kb = min(1024, t)
+    counted = true / ((s // qb) * (t // kb))
+    return true, counted

@@ -1,0 +1,30 @@
+"""Training losses: causal LM cross-entropy (f32, z-loss) + MoE aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_lm_loss(logits, tokens, *, z_loss: float = 1e-4, moe_aux=None,
+                   moe_aux_weight: float = 1e-2, prefix_len: int = 0):
+    """Next-token prediction: logits[:, t] predicts tokens[:, t+1].
+
+    ``prefix_len``: number of leading positions (image/audio prefix) whose
+    predictions are not scored.
+    """
+    lg = logits[:, prefix_len:-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - ll)
+    total = nll
+    if z_loss:
+        total = total + z_loss * jnp.mean(lse**2)
+    if moe_aux is not None:
+        total = total + moe_aux_weight * moe_aux
+    return total, {"nll": nll, "ppl_proxy": jnp.exp(jnp.minimum(nll, 20.0))}
+
+
+def seq2seq_loss(logits, tokens, **kw):
+    return causal_lm_loss(logits, tokens, **kw)

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD — state-space duality) blocks for zamba2.
+
+Chunked algorithm (one ``lax.scan`` over chunks, carrying the inter-chunk
+state): within a chunk the quadratic "attention-like" form is computed with
+batched einsums; across chunks only the [B, H, N, P] state flows. Peak live
+memory is one [B, Q, Q, H] tile (Q = cfg.ssm_chunk).
+
+Roofline note: the chunk scan body is counted once by ``cost_analysis``; the
+analytic correction (launch/costs.py) adds the remaining (nc−1)/nc of the
+SSD FLOPs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Px, apply_norm, dense_init, init_norm
+
+CONV_W = 4
+
+
+def dims(cfg, d_model=None):
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state
+    return d, di, h, p, n
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16):
+    d, di, h, p, n = dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * n  # conv over (x, B, C) as in mamba2
+    return {
+        "ln": init_norm(ks[0], d, cfg.norm),
+        "in_proj": Px(
+            dense_init(ks[1], (d, 2 * di + 2 * n + h), 0, dtype),
+            ("embed", "ff"),
+        ),
+        "conv_w": Px(
+            (jax.random.normal(ks[2], (CONV_W, conv_ch), jnp.float32) * 0.1).astype(dtype),
+            (None, "ff"),
+        ),
+        "conv_b": Px(jnp.zeros((conv_ch,), dtype), ("ff",)),
+        "a_log": Px(jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)), (None,)),
+        "dt_bias": Px(jnp.zeros((h,), jnp.float32), (None,)),
+        "d_skip": Px(jnp.ones((h,), jnp.float32), (None,)),
+        "out_norm": init_norm(ks[3], di, cfg.norm),
+        "out_proj": Px(dense_init(ks[4], (di, d), 0, dtype), ("ff", "embed")),
+    }
+
+
+def _split(p, cfg, u):
+    """in_proj output → (z, x, B, C, dt_raw)."""
+    _, di, h, _, n = dims(cfg)
+    z, x, b_, c_, dt = jnp.split(u, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, b_, c_, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over [B, S, C] with kernel [W, C]."""
+    pad = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(CONV_W)
+    )
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_forward(p, x_in, cfg, *, rules=None, chunk=None):
+    """Full-sequence SSD. x_in: [B, S, d] → [B, S, d]."""
+    d, di, h, hp, n = dims(cfg)
+    b, s, _ = x_in.shape
+    q = min(chunk or cfg.ssm_chunk, s)
+    nc = s // q
+    assert s % q == 0
+
+    res = x_in
+    u = apply_norm(p["ln"], x_in, cfg.norm, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xc, b_, c_, dt_raw = _split(p, cfg, u)
+    xbc = _causal_conv(jnp.concatenate([xc, b_, c_], -1), p["conv_w"], p["conv_b"])
+    xc, b_, c_ = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H]
+    loga = dt * a[None, None, :]  # [B,S,H]  (≤ 0)
+    xh = xc.reshape(b, s, h, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]  # discretized input
+    bf = b_.astype(jnp.float32)  # [B,S,N] (ngroups=1, shared across heads)
+    cf = c_.astype(jnp.float32)
+
+    # chunked layout
+    la = loga.reshape(b, nc, q, h)
+    lcs = jnp.cumsum(la, axis=2)  # within-chunk cumulative log decay
+    ltot = lcs[:, :, -1, :]  # [B,nc,H]
+    xq = xdt.reshape(b, nc, q, h, hp)
+    bq = bf.reshape(b, nc, q, n)
+    cq = cf.reshape(b, nc, q, n)
+
+    xs = (
+        jnp.moveaxis(xq, 1, 0),
+        jnp.moveaxis(bq, 1, 0),
+        jnp.moveaxis(cq, 1, 0),
+        jnp.moveaxis(lcs, 1, 0),
+        jnp.moveaxis(ltot, 1, 0),
+    )
+
+    def chunk_step(hstate, xs_c):
+        xck, bck, cck, lck, ltotk = xs_c  # [B,q,...]
+        # intra-chunk quadratic form
+        cb = jnp.einsum("bin,bjn->bij", cck, bck)  # [B,q,q]
+        dec = jnp.exp(
+            jnp.clip(lck[:, :, None, :] - lck[:, None, :, :], -60.0, 0.0)
+        )  # [B,q,q,H]
+        iota = jnp.arange(q)
+        causal = (iota[:, None] >= iota[None, :]).astype(jnp.float32)
+        w = cb[..., None] * dec * causal[None, :, :, None]  # [B,q,q,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xck)
+        # contribution of the carried inter-chunk state
+        dec_i = jnp.exp(jnp.clip(lck, -60.0, 0.0))  # [B,q,H]
+        y_carry = jnp.einsum("bin,bhnp->bihp", cck, hstate) * dec_i[..., None]
+        # new chunk state
+        dec_j = jnp.exp(jnp.clip(ltotk[:, None, :] - lck, -60.0, 0.0))  # [B,q,H]
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhnp", bck, dec_j, xck)
+        h_new = jnp.exp(jnp.clip(ltotk, -60.0, 0.0))[..., None, None] * hstate + s_c
+        return h_new, y_intra + y_carry
+
+    h0 = jnp.zeros((b, h, n, hp), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xs)  # [nc, B, q, H, P]
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hp)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x_in.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = apply_norm(p["out_norm"], y, cfg.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if rules is not None:
+        out = rules.constrain(out, "batch", "seq", "act_embed")
+    return res + out
+
+
+def ssd_decode(p, x_in, cfg, state, *, rules=None):
+    """One-token decode. state = {"h": [B,H,N,P] f32, "conv": [B,W-1,C]}."""
+    d, di, h, hp, n = dims(cfg)
+    b = x_in.shape[0]
+    res = x_in
+    u = apply_norm(p["ln"], x_in, cfg.norm, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z, xc, b_, c_, dt_raw = _split(p, cfg, u)
+    xbc_new = jnp.concatenate([xc, b_, c_], -1)  # [B,1,C]
+    conv_buf = jnp.concatenate([state["conv"], xbc_new], axis=1)  # [B,W,C]
+    out = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(out.astype(jnp.float32)).astype(x_in.dtype)[:, None, :]
+    xc, b_, c_ = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None, :])  # [B,H]
+    xh = xc[:, 0].reshape(b, h, hp).astype(jnp.float32)
+    bf = b_[:, 0].astype(jnp.float32)  # [B,N]
+    cf = c_[:, 0].astype(jnp.float32)
+    hs = state["h"] * da[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bf, dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cf, hs) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x_in.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = apply_norm(p["out_norm"], y, cfg.norm, cfg.norm_eps)
+    out_t = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return res + out_t, {"h": hs, "conv": conv_buf[:, 1:, :]}
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16):
+    d, di, h, hp, n = dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, n, hp), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, di + 2 * n), dtype),
+    }
+
+
+def ssm_state_axes(cfg):
+    return {"h": ("batch", None, None, None), "conv": ("batch", None, None)}

@@ -1,0 +1,178 @@
+"""Dense / MoE decoder-only transformer (gemma, deepseek, qwen, danube,
+granite, moonshot, paligemma backbone).
+
+Layers are a *python loop* (not ``lax.scan``): HLO then carries every
+layer's ops so ``cost_analysis`` FLOPs/bytes are exact (DESIGN.md §8 — scan
+bodies are counted once by XLA). Each block is wrapped in ``jax.checkpoint``
+for training so the dry-run memory analysis reflects the remat policy that
+would be used on hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    Px,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    init_norm,
+)
+
+
+def init_block(key, cfg, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(k1, cfg.d_model, cfg.norm),
+        "attn": attn.init_attention(k2, cfg, dtype=dtype),
+        "ln2": init_norm(k3, cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(k4, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k4, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def apply_block(p, x, cfg, *, rules=None, window=None):
+    """Train/prefill block: pre-norm attn + (MoE|MLP), residual."""
+    aux = {}
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    x = x + attn.attention(p["attn"], h, cfg, window=window, rules=rules)
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act, rules)
+    x = x + y
+    if rules is not None:
+        x = rules.constrain(x, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def apply_block_decode(p, x, cfg, cache, pos, *, rules=None, window=None):
+    """One-token decode block. cache = {"k": [B,T,K,hd], "v": ...}."""
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    a, new_k, new_v = attn.attention_decode(
+        p["attn"], h, cfg, cache["k"], cache["v"], pos, window=window, rules=rules
+    )
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_lib.apply_moe(p["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act, rules)
+    x = x + y
+    return x, {"k": new_k, "v": new_v}
+
+
+def init_lm(key, cfg, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p = {
+        "embed": Px(embed_init(keys[0], (cfg.vocab, cfg.d_model), dtype),
+                    ("vocab", "embed")),
+        "ln_f": init_norm(keys[1], cfg.d_model, cfg.norm),
+    }
+    for i in range(cfg.n_layers):
+        p[f"layer_{i}"] = init_block(keys[2 + i], cfg, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = Px(
+            embed_init(keys[-1], (cfg.vocab, cfg.d_model), dtype),
+            ("vocab", "embed"),
+        )
+    return p
+
+
+def _window(cfg, i: int):
+    return cfg.swa_window  # uniform SWA (danube); None = full attention
+
+
+def embed_tokens(params, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" or cfg.name.startswith("gemma"):
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+    return h
+
+
+def unembed(params, h, cfg, rules=None):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+    if rules is not None:
+        logits = rules.constrain(logits, "batch", "seq", "vocab")
+    return logits
+
+
+def forward(params, tokens, cfg, *, rules=None, remat: bool = True,
+            prefix_emb=None, last_only: bool = False):
+    """Token logits for train/prefill. ``prefix_emb`` (VLM/audio): embeddings
+    prepended before the token embeddings (stub modality frontends)."""
+    h = embed_tokens(params, tokens, cfg)
+    if prefix_emb is not None:
+        h = jnp.concatenate([prefix_emb.astype(h.dtype), h], axis=1)
+    if rules is not None:
+        h = rules.constrain(h, "batch", "seq", "act_embed")
+    aux_tot = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        # close over everything non-array so jax.checkpoint sees arrays only
+        blk = functools.partial(
+            apply_block, cfg=cfg, rules=rules, window=_window(cfg, i)
+        )
+        if remat:
+            # remat policy (§Perf): True/"full" recomputes everything;
+            # "dots" saves matmul outputs (no-batch-dim dots) — less
+            # backward recompute traffic for more live memory
+            policy = None
+            if remat == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            blk = jax.checkpoint(blk, prevent_cse=False, policy=policy)
+        h, aux = blk(params[f"layer_{i}"], h)
+        if "moe_aux" in aux:
+            aux_tot = aux_tot + aux["moe_aux"]
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    if last_only:  # prefill: only the last position's logits are served
+        h = h[:, -1:]
+    logits = unembed(params, h, cfg, rules)
+    return logits, {"moe_aux": aux_tot / max(cfg.n_layers, 1)}
+
+
+def decode_step(params, token, cache, pos, cfg, *, rules=None):
+    """token: [B] int32; cache: {"layer_i": {"k","v"}}; pos: scalar int32."""
+    h = embed_tokens(params, token[:, None], cfg)
+    new_cache = {}
+    for i in range(cfg.n_layers):
+        h, c = apply_block_decode(
+            params[f"layer_{i}"], h, cfg, cache[f"layer_{i}"], pos,
+            rules=rules, window=_window(cfg, i),
+        )
+        new_cache[f"layer_{i}"] = c
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    logits = unembed(params, h, cfg, rules)
+    return logits[:, 0], new_cache
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    c = {}
+    for i in range(cfg.n_layers):
+        shape = (batch, seq_len, cfg.n_kv_heads, cfg.hd)
+        c[f"layer_{i}"] = {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+        }
+    return c
+
+
+def cache_axes(cfg):
+    return {
+        f"layer_{i}": {
+            "k": ("batch", "kvseq", "kv_heads", None),
+            "v": ("batch", "kvseq", "kv_heads", None),
+        }
+        for i in range(cfg.n_layers)
+    }

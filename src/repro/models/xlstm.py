@@ -1,0 +1,370 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar
+memory, true recurrence), alternating 1:1 (xlstm-350m config).
+
+mLSTM stabilization note (DESIGN.md §6): the exponential input gate is
+stabilized with a *global* max-shift m_g = max_t ĩ_t computed outside the
+scan — exactly the paper's m-state stabilizer with the loosest admissible m,
+so the recurrence matches the official form while keeping the chunkwise
+parallel structure identical to SSD (decay = cumulative log-sigmoid forget
+gates ≤ 0; never overflows). The denominator threshold scales with exp(−m_g)
+accordingly.
+
+sLSTM is a genuine sequential recurrence (per-head block-diagonal R); the
+input projections for all four gates are hoisted out of the scan so the HLO
+cost of the big matmuls is exact (scan-body undercount only affects the
+R·h recurrent term — corrected analytically, launch/costs.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Px, apply_norm, dense_init, init_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg):
+    d = cfg.d_model
+    di = 2 * d  # pf = 2 up-projection
+    h = cfg.n_heads
+    p = di // h
+    return d, di, h, p
+
+
+def init_mlstm(key, cfg, dtype=jnp.bfloat16):
+    d, di, h, p = mlstm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": init_norm(ks[0], d, cfg.norm),
+        "up_x": Px(dense_init(ks[1], (d, di), 0, dtype), ("embed", "ff")),
+        "up_z": Px(dense_init(ks[2], (d, di), 0, dtype), ("embed", "ff")),
+        "wq": Px(dense_init(ks[3], (di, di), 0, dtype), ("ff", None)),
+        "wk": Px(dense_init(ks[4], (di, di), 0, dtype), ("ff", None)),
+        "wv": Px(dense_init(ks[5], (di, di), 0, dtype), ("ff", None)),
+        "w_if": Px(dense_init(ks[6], (di, 2 * h), 0, jnp.float32), ("ff", None)),
+        "b_if": Px(jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 * jnp.ones((h,), jnp.float32)]
+        ), (None,)),
+        "out_norm": init_norm(ks[7], di, cfg.norm),
+        "down": Px(dense_init(ks[8], (di, d), 0, dtype), ("ff", "embed")),
+    }
+
+
+def _mlstm_qkvg(p, u, cfg):
+    d, di, h, hp = mlstm_dims(cfg)
+    b, s, _ = u.shape
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(b, s, h, hp)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(b, s, h, hp) / jnp.sqrt(
+        jnp.float32(hp)
+    ).astype(u.dtype)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(b, s, h, hp)
+    gates = jnp.einsum("bse,eg->bsg", u.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+    return q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), i_raw, f_raw
+
+
+def mlstm_forward(p, x, cfg, *, rules=None, chunk: int = 256):
+    d, di, h, hp = mlstm_dims(cfg)
+    b, s, _ = x.shape
+    q_len = min(chunk, s)
+    nc = s // q_len
+    assert s % q_len == 0
+
+    res = x
+    xin = apply_norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", xin, p["up_x"])
+    z = jnp.einsum("bsd,de->bse", xin, p["up_z"])
+    q, k, v, i_raw, f_raw = _mlstm_qkvg(p, u, cfg)
+
+    m_g = jnp.max(i_raw, axis=1, keepdims=True)  # [B,1,H] global stabilizer
+    iw = jnp.exp(i_raw - m_g)  # [B,S,H]
+    logf = jax.nn.log_sigmoid(f_raw)  # ≤ 0
+    lcs_full = jnp.cumsum(logf.reshape(b, nc, q_len, h), axis=2)
+    ltot = lcs_full[:, :, -1, :]
+
+    qr = q.reshape(b, nc, q_len, h, hp)
+    kr = k.reshape(b, nc, q_len, h, hp)
+    vr = v.reshape(b, nc, q_len, h, hp)
+    ir = iw.reshape(b, nc, q_len, h)
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qr, kr, vr, ir, lcs_full, ltot)
+    )
+
+    def chunk_step(carry, xs_c):
+        cst, nst = carry  # C state [B,H,P,P], n state [B,H,P]
+        qc, kc, vc, ic, lc, lt = xs_c
+        dec = jnp.exp(jnp.clip(lc[:, :, None, :] - lc[:, None, :, :], -60.0, 0.0))
+        iota = jnp.arange(q_len)
+        causal = (iota[:, None] >= iota[None, :]).astype(jnp.float32)
+        wgt = dec * causal[None, :, :, None] * ic[:, None, :, :]  # [B,i,j,H]
+        scores = jnp.einsum("bihp,bjhp->bijh", qc, kc)
+        num_intra = jnp.einsum("bijh,bjhp->bihp", scores * wgt, vc)
+        den_vec = jnp.einsum("bijh,bjhp->bihp", wgt, kc)  # Σ_j dec·i·k_j
+        dec_i = jnp.exp(jnp.clip(lc, -60.0, 0.0))
+        num_carry = jnp.einsum("bihp,bhpr->bihr", qc, cst) * dec_i[..., None]
+        den_carry = jnp.einsum("bihp,bhp->bih", qc, nst) * dec_i
+        num = num_intra + num_carry
+        den = jnp.sum(qc * den_vec, axis=-1) + den_carry
+        dec_j = jnp.exp(jnp.clip(lt[:, None, :] - lc, -60.0, 0.0)) * ic
+        c_new = jnp.exp(jnp.clip(lt, -60.0, 0.0))[..., None, None] * cst + jnp.einsum(
+            "bjh,bjhp,bjhr->bhpr", dec_j, kc, vc
+        )
+        n_new = jnp.exp(jnp.clip(lt, -60.0, 0.0))[..., None] * nst + jnp.einsum(
+            "bjh,bjhp->bhp", dec_j, kc
+        )
+        return (c_new, n_new), (num, den)
+
+    c0 = jnp.zeros((b, h, hp, hp), jnp.float32)
+    n0 = jnp.zeros((b, h, hp), jnp.float32)
+    _, (nums, dens) = jax.lax.scan(chunk_step, (c0, n0), xs)
+    num = jnp.moveaxis(nums, 0, 1).reshape(b, s, h, hp)
+    den = jnp.moveaxis(dens, 0, 1).reshape(b, s, h)
+    thr = jnp.exp(-m_g)  # [B,1,H]
+    hout = num / jnp.maximum(jnp.abs(den), thr)[..., None]
+    hout = hout.reshape(b, s, di).astype(x.dtype)
+    hout = apply_norm(p["out_norm"], hout, cfg.norm, cfg.norm_eps)
+    hout = hout * jax.nn.silu(z.astype(jnp.float32)).astype(hout.dtype)
+    out = jnp.einsum("bse,ed->bsd", hout, p["down"])
+    if rules is not None:
+        out = rules.constrain(out, "batch", "seq", "act_embed")
+    return res + out
+
+
+def mlstm_decode(p, x, cfg, state, *, rules=None):
+    """state = {"c": [B,H,P,P], "n": [B,H,P], "m": [B,H]} (true m-state)."""
+    d, di, h, hp = mlstm_dims(cfg)
+    b = x.shape[0]
+    res = x
+    xin = apply_norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", xin, p["up_x"])
+    z = jnp.einsum("bsd,de->bse", xin, p["up_z"])
+    q, k, v, i_raw, f_raw = _mlstm_qkvg(p, u, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # [B,H,P]
+    i_raw, f_raw = i_raw[:, 0], f_raw[:, 0]  # [B,H]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state["m"], i_raw)
+    fw = jnp.exp(jnp.clip(logf + state["m"] - m_new, -60.0, 0.0))
+    iw = jnp.exp(jnp.clip(i_raw - m_new, -60.0, 0.0))
+    c_new = fw[..., None, None] * state["c"] + iw[..., None, None] * jnp.einsum(
+        "bhp,bhr->bhpr", k, v
+    )
+    n_new = fw[..., None] * state["n"] + iw[..., None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, c_new)
+    den = jnp.einsum("bhp,bhp->bh", q, n_new)
+    hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hout = hout.reshape(b, 1, di).astype(x.dtype)
+    hout = apply_norm(p["out_norm"], hout, cfg.norm, cfg.norm_eps)
+    hout = hout * jax.nn.silu(z.astype(jnp.float32)).astype(hout.dtype)
+    out = jnp.einsum("bse,ed->bsd", hout, p["down"])
+    return res + out, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def init_mlstm_state(cfg, batch: int):
+    d, di, h, hp = mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, hp, hp), jnp.float32),
+        "n": jnp.zeros((batch, h, hp), jnp.float32),
+        "m": jnp.full((batch, h), -30.0, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    return d, h, d // h
+
+
+def init_slstm(key, cfg, dtype=jnp.bfloat16):
+    d, h, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    f = int(8 * d / 3 / 64) * 64  # GeGLU pf 4/3 ×2 (xLSTM paper)
+    return {
+        "ln": init_norm(ks[0], d, cfg.norm),
+        "w_in": Px(dense_init(ks[1], (d, 4, h, dh), 0, dtype), ("embed", None, "heads", None)),
+        "r": Px(
+            (jax.random.normal(ks[2], (4, h, dh, dh), jnp.float32) * (1.0 / jnp.sqrt(dh))),
+            (None, "heads", None, None),
+        ),
+        "b": Px(jnp.zeros((4, h, dh), jnp.float32), (None, "heads", None)),
+        "out_norm": init_norm(ks[3], d, cfg.norm),
+        "ln_ffn": init_norm(ks[4], d, cfg.norm),
+        "ffn_wi": Px(dense_init(ks[5], (d, f), 0, dtype), ("embed", "ff")),
+        "ffn_wg": Px(dense_init(ks[6], (d, f), 0, dtype), ("embed", "ff")),
+        "ffn_wo": Px(dense_init(ks[7], (f, d), 0, dtype), ("ff", "embed")),
+    }
+
+
+def _slstm_cell(r, gin, st):
+    """One step. gin: [B,4,H,dh] pre-activations; st = (c, n, hprev, m)."""
+    c, n, hprev, m = st
+    rec = jnp.einsum("bhx,ghxy->bghy", hprev, r)  # [B,4,H,dh]
+    za, ia, fa, oa = [gin[:, g] + rec[:, g] for g in range(4)]
+    z = jnp.tanh(za)
+    o = jax.nn.sigmoid(oa)
+    m_new = jnp.maximum(fa + m, ia)
+    i = jnp.exp(jnp.clip(ia - m_new, -60.0, 0.0))
+    f = jnp.exp(jnp.clip(fa + m - m_new, -60.0, 0.0))
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg, *, rules=None):
+    d, h, dh = slstm_dims(cfg)
+    b, s, _ = x.shape
+    res = x
+    xin = apply_norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    gin = (
+        jnp.einsum("bsd,dghy->bsghy", xin, p["w_in"]).astype(jnp.float32)
+        + p["b"][None, None]
+    )  # [B,S,4,H,dh]
+
+    def step(st, g_t):
+        st = _slstm_cell(p["r"], g_t, st)
+        return st, st[2]
+
+    z0 = jnp.zeros((b, h, dh), jnp.float32)
+    st0 = (z0, z0, z0, jnp.full((b, h, dh), -30.0, jnp.float32))
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(gin, 1, 0))
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hout = apply_norm(p["out_norm"], hout, cfg.norm, cfg.norm_eps)
+    x = res + hout
+    # post-block GeGLU FFN (pf 4/3 ×2)
+    hf = apply_norm(p["ln_ffn"], x, cfg.norm, cfg.norm_eps)
+    a = jnp.einsum("bsd,df->bsf", hf, p["ffn_wi"])
+    g = jnp.einsum("bsd,df->bsf", hf, p["ffn_wg"])
+    a = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * a
+    out = jnp.einsum("bsf,fd->bsd", a, p["ffn_wo"])
+    if rules is not None:
+        out = rules.constrain(out, "batch", "seq", "act_embed")
+    return x + out
+
+
+def slstm_decode(p, x, cfg, state, *, rules=None):
+    d, h, dh = slstm_dims(cfg)
+    b = x.shape[0]
+    res = x
+    xin = apply_norm(p["ln"], x, cfg.norm, cfg.norm_eps)
+    gin = (
+        jnp.einsum("bsd,dghy->bsghy", xin, p["w_in"]).astype(jnp.float32)
+        + p["b"][None, None]
+    )[:, 0]
+    st = (state["c"], state["n"], state["h"], state["m"])
+    st = _slstm_cell(p["r"], gin, st)
+    hout = st[2].reshape(b, 1, d).astype(x.dtype)
+    hout = apply_norm(p["out_norm"], hout, cfg.norm, cfg.norm_eps)
+    x = res + hout
+    hf = apply_norm(p["ln_ffn"], x, cfg.norm, cfg.norm_eps)
+    a = jnp.einsum("bsd,df->bsf", hf, p["ffn_wi"])
+    g = jnp.einsum("bsd,df->bsf", hf, p["ffn_wg"])
+    a = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * a
+    out = jnp.einsum("bsf,fd->bsd", a, p["ffn_wo"])
+    new_state = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+    return x + out, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    d, h, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -30.0, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM language model: alternating mLSTM (even) / sLSTM (odd) blocks
+# ---------------------------------------------------------------------------
+
+
+def is_mlstm(i: int) -> bool:
+    return i % 2 == 0
+
+
+def init_xlstm_lm(key, cfg, dtype=jnp.bfloat16):
+    from repro.models.common import embed_init
+
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    p = {
+        "embed": Px(embed_init(keys[0], (cfg.vocab, cfg.d_model), dtype),
+                    ("vocab", "embed")),
+        "ln_f": init_norm(keys[1], cfg.d_model, cfg.norm),
+    }
+    for i in range(cfg.n_layers):
+        init = init_mlstm if is_mlstm(i) else init_slstm
+        p[f"layer_{i}"] = init(keys[2 + i], cfg, dtype)
+    return p
+
+
+def xlstm_forward(params, tokens, cfg, *, rules=None, remat: bool = True,
+                  last_only: bool = False):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if rules is not None:
+        h = rules.constrain(h, "batch", "seq", "act_embed")
+    import functools
+
+    # close over cfg/rules so jax.checkpoint only ever sees array args
+    m_fn = functools.partial(mlstm_forward, cfg=cfg, rules=rules)
+    s_fn = functools.partial(slstm_forward, cfg=cfg, rules=rules)
+    if remat:
+        m_fn, s_fn = jax.checkpoint(m_fn), jax.checkpoint(s_fn)
+    for i in range(cfg.n_layers):
+        fn = m_fn if is_mlstm(i) else s_fn
+        h = fn(params[f"layer_{i}"], h)
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]).astype(jnp.float32)
+    if rules is not None:
+        logits = rules.constrain(logits, "batch", "seq", "vocab")
+    return logits, {}
+
+
+def xlstm_decode_step(params, token, cache, pos, cfg, *, rules=None):
+    del pos  # O(1) state — position-free recurrence
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    new_cache = {}
+    for i in range(cfg.n_layers):
+        fn = mlstm_decode if is_mlstm(i) else slstm_decode
+        h, st = fn(params[f"layer_{i}"], h, cfg, cache[f"layer_{i}"], rules=rules)
+        new_cache[f"layer_{i}"] = st
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]).astype(jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def init_xlstm_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    del seq_len, dtype  # constant-size recurrent state (long_500k-native)
+    c = {}
+    for i in range(cfg.n_layers):
+        init = init_mlstm_state if is_mlstm(i) else init_slstm_state
+        c[f"layer_{i}"] = init(cfg, batch)
+    return c
+
+
+def xlstm_cache_axes(cfg):
+    c = {}
+    for i in range(cfg.n_layers):
+        if is_mlstm(i):
+            c[f"layer_{i}"] = {
+                "c": ("batch", "heads", None, None),
+                "n": ("batch", "heads", None),
+                "m": ("batch", "heads"),
+            }
+        else:
+            c[f"layer_{i}"] = {
+                "c": ("batch", "heads", None),
+                "n": ("batch", "heads", None),
+                "h": ("batch", "heads", None),
+                "m": ("batch", "heads", None),
+            }
+    return c

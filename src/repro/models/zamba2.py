@@ -1,0 +1,100 @@
+"""Zamba2 hybrid: 81 Mamba2 blocks + one *shared* attention block applied
+every ``attn_every`` blocks (weights shared across sites; each site keeps its
+own KV cache when decoding). The shared block is a full GQA transformer
+block (attention + gated MLP) as in Zamba2's shared transformer layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, transformer
+from repro.models.common import Px, apply_norm, embed_init, init_norm
+
+
+def attn_sites(cfg) -> list[int]:
+    period = max(cfg.attn_every, 1)
+    return [i for i in range(cfg.n_layers) if (i + 1) % period == 0]
+
+
+def init_zamba2(key, cfg, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p = {
+        "embed": Px(embed_init(keys[0], (cfg.vocab, cfg.d_model), dtype),
+                    ("vocab", "embed")),
+        "ln_f": init_norm(keys[1], cfg.d_model, cfg.norm),
+        "shared": transformer.init_block(keys[2], cfg, dtype),
+    }
+    for i in range(cfg.n_layers):
+        p[f"ssm_{i}"] = mamba2.init_mamba2(keys[3 + i], cfg, dtype)
+    return p
+
+
+def forward(params, tokens, cfg, *, rules=None, remat: bool = True,
+            last_only: bool = False):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if rules is not None:
+        h = rules.constrain(h, "batch", "seq", "act_embed")
+    sites = set(attn_sites(cfg))
+    import functools
+
+    # close over cfg/rules so jax.checkpoint only ever sees array args
+    ssm_fn = functools.partial(mamba2.ssd_forward, cfg=cfg, rules=rules)
+    blk_fn = functools.partial(transformer.apply_block, cfg=cfg, rules=rules)
+    if remat:
+        ssm_fn = jax.checkpoint(ssm_fn)
+        blk_fn = jax.checkpoint(blk_fn)
+    for i in range(cfg.n_layers):
+        h = ssm_fn(params[f"ssm_{i}"], h)
+        if i in sites:
+            h, _ = blk_fn(params["shared"], h)
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]).astype(jnp.float32)
+    if rules is not None:
+        logits = rules.constrain(logits, "batch", "seq", "vocab")
+    return logits, {}
+
+
+def decode_step(params, token, cache, pos, cfg, *, rules=None):
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    sites = set(attn_sites(cfg))
+    new_cache = {}
+    for i in range(cfg.n_layers):
+        h, st = mamba2.ssd_decode(params[f"ssm_{i}"], h, cfg,
+                                  cache[f"ssm_{i}"], rules=rules)
+        new_cache[f"ssm_{i}"] = st
+        if i in sites:
+            h, kv = transformer.apply_block_decode(
+                params["shared"], h, cfg, cache[f"attn_{i}"], pos, rules=rules
+            )
+            new_cache[f"attn_{i}"] = kv
+    h = apply_norm(params["ln_f"], h, cfg.norm, cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]).astype(jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    c = {}
+    for i in range(cfg.n_layers):
+        c[f"ssm_{i}"] = mamba2.init_ssm_state(cfg, batch, dtype)
+    for i in attn_sites(cfg):
+        c[f"attn_{i}"] = {
+            "k": jnp.zeros((batch, seq_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, seq_len, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+    return c
+
+
+def cache_axes(cfg):
+    axes = {}
+    for i in range(cfg.n_layers):
+        axes[f"ssm_{i}"] = mamba2.ssm_state_axes(cfg)
+    for i in attn_sites(cfg):
+        axes[f"attn_{i}"] = {
+            "k": ("batch", "kvseq", "kv_heads", None),
+            "v": ("batch", "kvseq", "kv_heads", None),
+        }
+    return axes

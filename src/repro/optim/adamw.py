@@ -1,0 +1,82 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Built from scratch (no optax in the container). Moments are f32 regardless
+of parameter dtype; the update is computed in f32 and cast back — the usual
+mixed-precision training recipe. Optimizer state shards exactly like the
+parameters (the state trees mirror the param tree, so the same NamedSharding
+trees apply — see launch/train.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    mu: Any  # f32 tree
+    nu: Any  # f32 tree
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step_f = step.astype(jnp.float32)
+    warm = base_lr * step_f / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step_f - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step_f < warmup, warm, cos)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        (grad_clip > 0) & (gnorm > grad_clip), grad_clip / jnp.maximum(gnorm, 1e-9), 1.0
+    )
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

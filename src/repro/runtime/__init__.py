@@ -1,0 +1,13 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import MeshPlan, PreemptionGuard, make_mesh_from_plan, plan_mesh
+from repro.runtime.straggler import StragglerEvent, StragglerMonitor
+
+__all__ = [
+    "CheckpointManager",
+    "MeshPlan",
+    "PreemptionGuard",
+    "make_mesh_from_plan",
+    "plan_mesh",
+    "StragglerEvent",
+    "StragglerMonitor",
+]

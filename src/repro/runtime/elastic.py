@@ -1,0 +1,103 @@
+"""Elastic re-meshing + preemption handling.
+
+On a node failure the job restarts with fewer devices. ``plan_mesh`` picks
+the best (pod, data, model) factorization for the survivor count, keeping
+the model axis as close as possible to the original TP degree (params must
+still fit) and folding everything else into data parallelism. The global
+batch is preserved by scaling per-device batch (gradient accumulation picks
+up any remainder — see dist/accumulate.py).
+
+``PreemptionGuard`` turns SIGTERM/SIGINT into a cooperative "save and exit"
+flag that the train loop polls once per step — the checkpoint manager's
+atomic commit makes the save safe even if the grace period expires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+    per_device_batch: int
+    accum_steps: int
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    global_batch: int,
+    want_model: int = 16,
+    want_pods: int = 1,
+) -> MeshPlan:
+    """Largest usable mesh for ``n_devices`` survivors.
+
+    Picks model-axis size = the largest divisor of ``n_devices`` that is
+    ≤ ``want_model`` (never grows TP beyond the tuned degree), then the pod
+    axis, then data soaks up the rest. Per-device batch follows from the
+    preserved global batch; if data-parallel width doesn't divide the global
+    batch, gradient accumulation supplies the remainder.
+    """
+    model = max(d for d in _divisors(n_devices) if d <= want_model)
+    rest = n_devices // model
+    pods = max(d for d in _divisors(rest) if d <= want_pods)
+    data = rest // pods
+    if pods > 1:
+        shape, axes = (pods, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    dp = pods * data
+    if global_batch % dp == 0:
+        per_dev, accum = global_batch // dp, 1
+    else:
+        # smallest accumulation count that makes microbatches divide evenly
+        accum = next(a for a in range(2, global_batch + 1)
+                     if global_batch % (dp * a) == 0 or dp * a >= global_batch)
+        per_dev = max(global_batch // (dp * accum), 1)
+    return MeshPlan(shape=shape, axes=axes, per_device_batch=per_dev,
+                    accum_steps=accum)
+
+
+def make_mesh_from_plan(plan: MeshPlan):
+    return jax.make_mesh(
+        plan.shape, plan.axes, axis_types=(AxisType.Auto,) * len(plan.axes)
+    )
+
+
+class PreemptionGuard:
+    """Cooperative SIGTERM/SIGINT → checkpoint-and-exit flag."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._requested = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def restore(self) -> None:
+        for s, h in self._prev.items():
+            signal.signal(s, h)

@@ -1,0 +1,90 @@
+"""Straggler detection: EMA step-time monitor with outlier actions.
+
+At thousand-chip scale a single slow host (thermal throttle, failing HBM,
+noisy neighbor) sets the pace of every synchronous collective. The monitor
+keeps an exponential moving average + variance of the step time and flags
+steps that exceed ``mean + z·std`` (and a hard ratio). Consumers register
+callbacks: log, checkpoint-and-remesh (drop the slow host via elastic
+restart), or re-layout.
+
+The detector is deliberately host-side and out of the jit path — it
+measures the only thing that matters (wall time between optimizer commits)
+and costs nothing on-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    mean: float
+    std: float
+    ratio: float
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        *,
+        ema_decay: float = 0.95,
+        z_threshold: float = 4.0,
+        ratio_threshold: float = 2.0,
+        warmup_steps: int = 5,
+    ):
+        self.decay = ema_decay
+        self.z = z_threshold
+        self.ratio = ratio_threshold
+        self.warmup = warmup_steps
+        self.mean = 0.0
+        self.var = 0.0
+        self.count = 0
+        self.events: list[StragglerEvent] = []
+        self._callbacks: list[Callable[[StragglerEvent], None]] = []
+        self._last: float | None = None
+
+    def on_straggler(self, fn: Callable[[StragglerEvent], None]) -> None:
+        self._callbacks.append(fn)
+
+    def begin_step(self) -> None:
+        self._last = time.perf_counter()
+
+    def end_step(self, step: int) -> float:
+        assert self._last is not None, "begin_step not called"
+        dt = time.perf_counter() - self._last
+        self.observe(step, dt)
+        return dt
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Feed one step time; returns True if flagged as a straggler step."""
+        self.count += 1
+        if self.count <= self.warmup:
+            # seed the statistics without flagging
+            self.mean = dt if self.count == 1 else (
+                self.decay * self.mean + (1 - self.decay) * dt
+            )
+            return False
+        std = max(self.var, 1e-12) ** 0.5
+        is_slow = (dt > self.mean + self.z * std) and (
+            dt > self.ratio * max(self.mean, 1e-9)
+        )
+        if is_slow:
+            ev = StragglerEvent(
+                step=step, step_time=dt, mean=self.mean, std=std,
+                ratio=dt / max(self.mean, 1e-9),
+            )
+            self.events.append(ev)
+            for fn in self._callbacks:
+                fn(ev)
+        else:
+            # straggler steps are excluded from the EMA so one hiccup does
+            # not mask a second one
+            delta = dt - self.mean
+            self.mean += (1 - self.decay) * delta
+            self.var = self.decay * (self.var + (1 - self.decay) * delta * delta)
+        return is_slow

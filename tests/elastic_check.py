@@ -1,0 +1,99 @@
+"""Subprocess body: elastic restart end-to-end on 8 host devices.
+
+Simulates losing half a pod: train on a (2, 4) mesh with FSDP+TP shardings,
+checkpoint, rebuild a (4,) × (2,)-shaped *different* mesh as the survivor
+plan would, restore with the new mesh's shardings (reshard-on-restore), and
+continue training — losses must continue from the same state (first restored
+step's loss equals a no-restart run's loss at that step).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import RunConfig, get_smoke_config
+from repro.data import SyntheticTokens, TokenDatasetConfig
+from repro.dist.sharding import make_rules
+from repro.launch.lowering import _tree_shardings
+from repro.launch.train import build_train_step
+from repro.models.api import build_model
+from repro.optim import adamw_init
+from repro.runtime import CheckpointManager, make_mesh_from_plan, plan_mesh
+
+
+def setup(mesh, cfg, run, seed=0):
+    rules = make_rules(mesh, "train")
+    model = build_model(cfg)
+    axes = model.axes()
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(seed))
+    p_shard = _tree_shardings(rules, params_s, axes)
+    step_fn = build_train_step(model, rules, run, accum=1)
+    return model, rules, p_shard, jax.jit(step_fn, donate_argnums=(0, 1, 3))
+
+
+def run_steps(mesh, jit_step, params, opt, ds, b_shard, start, n):
+    losses = []
+    with mesh:
+        for s in range(start, start + n):
+            batch = {"tokens": jax.device_put(ds.batch(s), b_shard)}
+            params, opt, _err, m = jit_step(params, opt, batch, None)
+            losses.append(float(m["loss"]))
+    return params, opt, losses
+
+
+def main():
+    assert jax.device_count() == 8
+    cfg = get_smoke_config("h2o_danube_1_8b")
+    run = RunConfig(lr=1e-3, total_steps=12, warmup_steps=2)
+    ds = SyntheticTokens(TokenDatasetConfig(vocab=cfg.vocab, seq_len=32,
+                                            global_batch=8, seed=0))
+
+    # --- phase 1: full fleet (2, 4) = (data, model) -----------------------
+    plan_a = plan_mesh(8, global_batch=8, want_model=4)
+    mesh_a = make_mesh_from_plan(plan_a)
+    model, rules_a, pshard_a, step_a = setup(mesh_a, cfg, run)
+    with mesh_a:
+        params = jax.jit(model.init, out_shardings=pshard_a)(
+            jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+    bshard_a = rules_a.sharding(("batch", "seq"), (8, 32))
+    params, opt, losses_a = run_steps(mesh_a, step_a, params, opt, ds,
+                                      bshard_a, 0, 6)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        mgr.save(6, (params, opt))
+
+        # reference: continue on the same mesh without restarting
+        p_ref, o_ref, losses_ref = run_steps(mesh_a, step_a, params, opt, ds,
+                                             bshard_a, 6, 3)
+
+        # --- phase 2: survivor fleet (4, 2) — different mesh shape --------
+        plan_b = plan_mesh(8, global_batch=8, want_model=2)
+        mesh_b = make_mesh_from_plan(plan_b)
+        assert tuple(mesh_b.shape.values()) != tuple(mesh_a.shape.values())
+        model_b, rules_b, pshard_b, step_b = setup(mesh_b, cfg, run)
+        with mesh_b:
+            p_s = jax.eval_shape(model_b.init, jax.random.PRNGKey(0))
+            template = (p_s, jax.eval_shape(adamw_init, p_s))
+            (params_b, opt_b), step_no, _ = mgr.restore(template)
+            params_b = jax.device_put(params_b, pshard_b)  # reshard
+        assert step_no == 6
+        bshard_b = rules_b.sharding(("batch", "seq"), (8, 32))
+        _, _, losses_b = run_steps(mesh_b, step_b, params_b, opt_b, ds,
+                                   bshard_b, 6, 3)
+
+    np.testing.assert_allclose(losses_b, losses_ref, rtol=2e-4, atol=1e-5)
+    print(json.dumps({"ok": True, "losses_pre": losses_a,
+                      "losses_resumed": losses_b,
+                      "losses_reference": losses_ref}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Property tests (hypothesis) for the MDL cost machinery + exactness of the
+closed-form evaluation against dense brute force (Eqs. 2/4/9/10/11)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs
+from repro.core.ref_numpy import SSumMRef, _entropy_bits
+from repro.core.types import SummaryState, init_state, make_graph
+from repro.core import evaluate as ev
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# entropy / encoding properties
+# ---------------------------------------------------------------------------
+
+
+@given(cnt=st.integers(0, 1000), pi=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_entropy_bits_bounds(cnt, pi):
+    """0 ≤ Cost₍₁₎−C̄ ≤ |Π| bits (entropy of a Bernoulli ≤ 1 bit/slot)."""
+    got = float(costs.entropy_bits(jnp.float32(cnt), jnp.float32(pi)))
+    assert got >= 0.0
+    assert got <= max(pi, 0) + 1e-3
+    if 0 < cnt < pi:
+        want = _entropy_bits(cnt, pi)
+        assert math.isclose(got, want, rel_tol=1e-5, abs_tol=1e-3)
+    else:
+        assert got == 0.0
+
+
+@given(cnt=st.integers(1, 500), extra=st.integers(0, 500),
+       cbar=st.floats(1.0, 100.0), log2v=st.floats(2.0, 30.0))
+@settings(**SETTINGS)
+def test_pair_cost_star_is_min(cnt, extra, cbar, log2v):
+    pi = cnt + extra
+    c1 = cbar + float(costs.entropy_bits(jnp.float32(cnt), jnp.float32(pi)))
+    c2 = 2.0 * cnt * log2v
+    got = float(costs.pair_cost_star(jnp.float32(cnt), jnp.float32(pi),
+                                     jnp.float32(cbar), jnp.float32(log2v)))
+    assert math.isclose(got, min(c1, c2), rel_tol=1e-5, abs_tol=1e-3)
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_keep_decision_consistent_with_costs(data):
+    cnt = data.draw(st.integers(1, 200))
+    pi = cnt + data.draw(st.integers(0, 400))
+    cbar = data.draw(st.floats(1.0, 80.0))
+    log2v = data.draw(st.floats(2.0, 24.0))
+    keep = bool(costs.keep_superedge(jnp.float32(cnt), jnp.float32(pi),
+                                     jnp.float32(cbar), jnp.float32(log2v),
+                                     re_guard=0))
+    c1 = cbar + float(costs.entropy_bits(jnp.float32(cnt), jnp.float32(pi)))
+    c2 = 2.0 * cnt * log2v
+    assert keep == (c1 < c2)
+
+
+# ---------------------------------------------------------------------------
+# closed-form evaluation == dense brute force
+# ---------------------------------------------------------------------------
+
+
+def _random_graph_and_partition(rng, v, e_target, n_groups):
+    src = rng.integers(0, v, e_target)
+    dst = rng.integers(0, v, e_target)
+    keep = src != dst
+    graph, _ = make_graph(src[keep], dst[keep], v)
+    n2s_group = rng.integers(0, n_groups, v)
+    # canonical representative ids (supernode id = min member id)
+    reps = np.full(n_groups, -1, np.int64)
+    n2s = np.zeros(v, np.int64)
+    for u in range(v):
+        g = n2s_group[u]
+        if reps[g] < 0:
+            reps[g] = u
+        n2s[u] = reps[g]
+    return graph, n2s
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_metrics_match_dense_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    v = 40
+    graph, n2s = _random_graph_and_partition(rng, v, 160, 12)
+    e = graph.num_edges
+    size = np.bincount(n2s, minlength=v)
+    state = SummaryState(
+        node2super=jnp.asarray(n2s, jnp.int32),
+        size=jnp.asarray(size, jnp.int32),
+        rng=jnp.zeros((2,), jnp.uint32),
+        t=jnp.asarray(1, jnp.int32),
+    )
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    m = costs.summary_metrics(pt, state, v, e, cbar_mode="paper", re_guard=1)
+
+    # --- dense reconstruction with the same keep decisions ---------------
+    keep = np.asarray(m["keep"])
+    lo = np.asarray(pt.lo)[keep]
+    hi = np.asarray(pt.hi)[keep]
+    w = np.asarray(pt.cnt)[keep].astype(np.int64)
+    from repro.core.types import SummaryResult
+
+    res = SummaryResult(
+        node2super=n2s.astype(np.int32), super_size=size.astype(np.int32),
+        edge_lo=lo, edge_hi=hi, edge_w=w,
+        num_supernodes=int((size > 0).sum()), num_superedges=len(w),
+        size_bits=0.0, input_size_bits=0.0, re1=0.0, re2=0.0, mdl_cost=0.0,
+        iterations_run=0,
+    )
+    a = ev.dense_adjacency(np.asarray(graph.src), np.asarray(graph.dst), v)
+    a_hat = ev.reconstruct_dense(res)
+    np.testing.assert_allclose(float(m["re1"]), ev.re_p_dense(a, a_hat, 1),
+                               rtol=1e-4, atol=1e-8)
+    np.testing.assert_allclose(float(m["re2"]), ev.re_p_dense(a, a_hat, 2),
+                               rtol=1e-4, atol=1e-8)
+    np.testing.assert_allclose(float(m["size_bits"]),
+                               ev.summary_size_bits_dense(res), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.1 (2-hop merger bound) on the sequential oracle's exact costs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lemma_31_reduction_bound(seed):
+    rng = np.random.default_rng(seed)
+    v = 24
+    src = rng.integers(0, v, 60)
+    dst = rng.integers(0, v, 60)
+    keep = src != dst
+    ref = SSumMRef(src[keep], dst[keep], v, cbar_mode="paper", re_guard=0)
+    cbar = ref._cbar()
+    checked = 0
+    for a in range(v):
+        for b in ref.adj[a]:  # 1-hop pairs are within 2 hops
+            if a >= b:
+                continue
+            cost_a = ref.supernode_cost(a, cbar)
+            cost_b = ref.supernode_cost(b, cbar)
+            cost_ab = ref.pair_cost(float(ref.adj[a].get(b, 0)),
+                                    ref._pi(a, b), cbar)
+            reduction = (cost_a + cost_b - cost_ab) - ref.merged_cost(a, b, cbar)
+            assert reduction <= min(cost_a, cost_b) + 1e-6
+            checked += 1
+    assert checked > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_lemma_32_far_pairs_bound(seed):
+    """Mergers of ≥3-hop-apart supernodes reduce cost by ≤ C̄ (Lemma 3.2)."""
+    rng = np.random.default_rng(seed)
+    v = 30
+    # two disconnected cliques => cross pairs are infinitely far apart
+    edges = []
+    for base in (0, 15):
+        for i in range(base, base + 8):
+            for j in range(i + 1, base + 8):
+                if rng.random() < 0.6:
+                    edges.append((i, j))
+    src, dst = np.array([e[0] for e in edges]), np.array([e[1] for e in edges])
+    ref = SSumMRef(src, dst, v, cbar_mode="paper", re_guard=0)
+    cbar = ref._cbar()
+    cbar_bound = 2 * ref.log2v + ref.log2e
+    for a in range(0, 8):
+        for b in range(15, 23):
+            cost_a = ref.supernode_cost(a, cbar)
+            cost_b = ref.supernode_cost(b, cbar)
+            reduction = (cost_a + cost_b) - ref.merged_cost(a, b, cbar)
+            assert reduction <= cbar_bound + 1e-6

@@ -1,0 +1,28 @@
+"""Distributed SSumM correctness on a multi-device host mesh.
+
+jax locks the device count at first init, so the 8-device check runs in a
+subprocess (tests/dist_check.py) — the same pattern the dry-run uses."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_distributed_step_parity_and_progress():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "dist_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    last = out.stdout.strip().splitlines()[-1]
+    rec = json.loads(last)
+    assert rec["ok"] and rec["merged"] > 0

@@ -1,0 +1,29 @@
+"""Elastic restart: checkpoint on one mesh shape, reshard-on-restore onto a
+different survivor mesh, training continues bit-compatibly (subprocess —
+needs its own 8-device jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_elastic_reshard_on_restore():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "elastic_check.py")],
+        capture_output=True, text=True, timeout=1800, env=env,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    # resumed losses equal the no-restart reference (same stream, same state)
+    assert rec["losses_resumed"] == pytest.approx(rec["losses_reference"],
+                                                  rel=2e-4)

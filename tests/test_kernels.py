@@ -1,0 +1,82 @@
+"""Per-kernel validation (deliverable c): Pallas interpret-mode vs the
+pure-jnp oracle, swept over shapes and operand regimes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+
+def _operands(g, c, u, seed=0, dense=False):
+    rng = np.random.default_rng(seed)
+    lam = 2.0 if dense else 0.4
+    m = rng.poisson(lam, size=(g, c, u)).astype(np.float32)
+    n = rng.integers(1, 40, size=(g, c)).astype(np.float32)
+    # some dead members (padding) — kernels must mask them out
+    n[rng.random((g, c)) < 0.2] = 0.0
+    s = rng.poisson(0.3, size=(g, c)).astype(np.float32)
+    n_u = rng.integers(1, 40, size=(g, u)).astype(np.float32)
+    cidx = rng.integers(0, u + 1, size=(g, c)).astype(np.int32)  # u = absent
+    w = rng.poisson(0.2, size=(g, c, c)).astype(np.float32)
+    w = np.maximum(w, np.swapaxes(w, 1, 2))
+    np.einsum("gcc->gc", w)[...] = 0.0
+    pi_row = n[..., None] * n_u[:, None, :]
+    t = np.asarray(
+        ref.pair_cost_ref(jnp.asarray(m), jnp.asarray(pi_row),
+                          jnp.float32(60.0), jnp.float32(20.0))
+    ).sum(-1) + 5.0
+    return [jnp.asarray(x) for x in (m, n, s, t.astype(np.float32), n_u, cidx, w)]
+
+
+@pytest.mark.parametrize("g,c,u", [(1, 4, 8), (3, 8, 16), (2, 16, 32), (5, 32, 64)])
+@pytest.mark.parametrize("dense", [False, True])
+def test_merge_gain_matches_oracle(g, c, u, dense):
+    args = _operands(g, c, u, seed=g * 100 + u, dense=dense)
+    cbar, log2v = jnp.float32(60.0), jnp.float32(20.0)
+    rel_p, red_p = kops.merge_gain(*args, cbar, log2v, use_pallas=True,
+                                   interpret=True)
+    rel_r, red_r = kops.merge_gain(*args, cbar, log2v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(red_p), np.asarray(red_r),
+                               rtol=1e-5, atol=1e-3)
+    # rel contains -inf on invalid entries — compare masks then values
+    mp, mr = np.isfinite(rel_p), np.isfinite(rel_r)
+    np.testing.assert_array_equal(mp, mr)
+    np.testing.assert_allclose(np.asarray(rel_p)[mp], np.asarray(rel_r)[mr],
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("e", [7, 128, 1024, 1025, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_pair_cost_matches_oracle(e, dtype):
+    rng = np.random.default_rng(e)
+    cnt = rng.poisson(1.0, size=e).astype(np.float32)
+    pi = (cnt + rng.integers(0, 30, size=e)).astype(np.float32)
+    cnt_j = jnp.asarray(cnt).astype(dtype)
+    pi_j = jnp.asarray(pi).astype(dtype)
+    cbar, log2v = jnp.float32(45.0), jnp.float32(14.0)
+    got = kops.pair_cost(cnt_j, pi_j, cbar, log2v, use_pallas=True,
+                         interpret=True)
+    want = ref.pair_cost_ref(cnt_j, pi_j, cbar, log2v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_merge_gain_symmetry():
+    """Reduction(A,B) must equal Reduction(B,A) (unordered merges)."""
+    args = _operands(2, 8, 16, seed=7)
+    rel, red = kops.merge_gain(*args, jnp.float32(60.0), jnp.float32(20.0),
+                               use_pallas=True, interpret=True)
+    red = np.asarray(red)
+    np.testing.assert_allclose(red, np.swapaxes(red, 1, 2), rtol=1e-5,
+                               atol=1e-3)
+
+
+def test_merge_gain_self_pairs_invalid():
+    args = _operands(1, 6, 8, seed=3)
+    rel, _ = kops.merge_gain(*args, jnp.float32(60.0), jnp.float32(20.0),
+                             use_pallas=True, interpret=True)
+    diag = np.einsum("gcc->gc", np.asarray(rel))
+    assert np.all(np.isneginf(diag))

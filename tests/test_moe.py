@@ -1,0 +1,54 @@
+"""MoE dispatch: GSPMD-vs-a2a parity (multi-device, subprocess) and local
+dispatch invariants."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dispatch_buckets_roundtrip():
+    from repro.models.moe import _dispatch_to_buckets
+
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.standard_normal((20, 3)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 4, 20), jnp.int32)
+    buckets, order, flat, ok = _dispatch_to_buckets(vals, keys, 4, cap=8)
+    assert bool(jnp.all(ok))  # cap 8 ≥ worst bucket load here? verify:
+    # every row landed in the bucket of its key
+    got = np.asarray(buckets).reshape(32, 3)
+    for i in range(20):
+        r = int(np.asarray(order)[i])
+        f = int(np.asarray(flat)[i])
+        np.testing.assert_array_equal(got[f], np.asarray(vals)[r])
+
+
+def test_dispatch_buckets_capacity_drop():
+    from repro.models.moe import _dispatch_to_buckets
+
+    vals = jnp.ones((10, 2), jnp.float32)
+    keys = jnp.zeros((10,), jnp.int32)  # all to bucket 0, cap 4
+    buckets, _, _, ok = _dispatch_to_buckets(vals, keys, 2, cap=4)
+    assert int(jnp.sum(ok)) == 4
+    assert float(jnp.sum(buckets)) == 4 * 2
+
+
+@pytest.mark.slow
+def test_a2a_matches_gspmd_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "moe_check.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]

@@ -1,0 +1,181 @@
+"""Runtime substrate: checkpoint atomicity/restore, elastic mesh planning,
+straggler detection, data determinism, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import Loader, SyntheticTokens, TokenDatasetConfig
+from repro.dist import CompressConfig, decode_int8, encode_int8, encode_topk
+from repro.dist.compress import init_error_buffers, payload_bytes
+from repro.runtime import CheckpointManager, StragglerMonitor, plan_mesh
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.standard_normal(3), jnp.float32),
+                   "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    mgr.save(10, tree, extra={"loss": 1.5})
+    got, step, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 10 and extra["loss"] == 1.5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), got, tree)
+
+
+def test_checkpoint_keep_n_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, _tree())
+    # simulate a crash mid-write: directory without COMMIT
+    os.makedirs(tmp_path / "step_0000000009")
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_restore_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# elastic planning
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 4096), batch=st.sampled_from([32, 256, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_plan_mesh_properties(n, batch):
+    plan = plan_mesh(n, global_batch=batch, want_model=16, want_pods=2)
+    assert plan.n_devices == n
+    assert "model" in plan.axes and "data" in plan.axes
+    # model axis never exceeds the requested TP degree
+    model = plan.shape[plan.axes.index("model")]
+    assert model <= 16
+    # global batch is preserved: dp · per_device · accum ≥ batch
+    dp = plan.n_devices // model
+    assert dp * plan.per_device_batch * plan.accum_steps >= min(batch, dp)
+
+
+def test_plan_mesh_survivor_shrink():
+    full = plan_mesh(512, global_batch=256, want_model=16, want_pods=2)
+    assert full.shape == (2, 16, 16)
+    survivor = plan_mesh(448, global_batch=256, want_model=16, want_pods=2)
+    assert survivor.n_devices == 448  # keeps every surviving chip busy
+    model = survivor.shape[survivor.axes.index("model")]
+    assert 448 % model == 0
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_flags_spike():
+    mon = StragglerMonitor(warmup_steps=3, z_threshold=3.0, ratio_threshold=1.5)
+    flags = [mon.observe(i, 0.1 + 0.001 * (i % 3)) for i in range(20)]
+    assert not any(flags)
+    assert mon.observe(20, 1.0)  # 10× spike
+    assert len(mon.events) == 1 and mon.events[0].ratio > 5
+    # EMA not polluted by the spike
+    assert mon.mean < 0.2
+
+
+def test_straggler_callback():
+    mon = StragglerMonitor(warmup_steps=2, z_threshold=2.0, ratio_threshold=1.5)
+    seen = []
+    mon.on_straggler(seen.append)
+    for i in range(10):
+        mon.observe(i, 0.05)
+    mon.observe(10, 0.5)
+    assert len(seen) == 1 and seen[0].step == 10
+
+
+# ---------------------------------------------------------------------------
+# data determinism
+# ---------------------------------------------------------------------------
+
+
+def test_tokens_deterministic_and_sharded():
+    cfg = TokenDatasetConfig(vocab=128, seq_len=32, global_batch=8, seed=3)
+    ds = SyntheticTokens(cfg)
+    a, b = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(ds.batch(5), ds.batch(6))
+    assert a.min() >= 0 and a.max() < 128
+    # rank shards tile the global batch exactly
+    parts = [ds.batch_for_rank(5, r, 4) for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), a)
+
+
+def test_loader_resume_stream():
+    cfg = TokenDatasetConfig(vocab=64, seq_len=16, global_batch=2, seed=0)
+    ds = SyntheticTokens(cfg)
+    loader = Loader(ds.batch, start_index=3, prefetch=2)
+    idx, batch = next(loader)
+    assert idx == 3
+    np.testing.assert_array_equal(np.asarray(batch), ds.batch(3))
+    loader.close()
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    q, s = encode_int8(g)
+    back = decode_int8(q, s)
+    err = float(jnp.max(jnp.abs(back["a"] - g["a"])))
+    assert err <= float(s["a"]) * 0.5 + 1e-6  # half-ULP of the scale
+
+
+def test_topk_error_feedback_conserves_signal():
+    """Over many steps, sent + residual ≡ the accumulated gradient signal."""
+    rng = np.random.default_rng(1)
+    g = {"a": jnp.asarray(rng.standard_normal(256), jnp.float32)}
+    err = init_error_buffers(g)
+    sent_total = jnp.zeros(256)
+    for _ in range(5):
+        sent, err = encode_topk(g, err, ratio=0.1)
+        sent_total = sent_total + sent["a"]
+        nz = int(jnp.sum(sent["a"] != 0.0))
+        assert nz <= 26  # ~top 10%
+    recon = sent_total + err["a"]
+    np.testing.assert_allclose(np.asarray(recon), 5 * np.asarray(g["a"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_payload_accounting():
+    g = {"a": jnp.zeros((1000,), jnp.float32)}
+    full = payload_bytes(g, CompressConfig("none"))
+    int8 = payload_bytes(g, CompressConfig("int8"))
+    topk = payload_bytes(g, CompressConfig("topk", topk_ratio=0.05))
+    assert full == 4000.0
+    assert int8 < full / 3.5
+    assert topk < full / 9.0
