@@ -36,20 +36,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import costs, shingles, tables
 from repro.core.merge import apply_merges, select_matching
 from repro.core.types import PairTable, SummaryConfig, SummaryState
+from repro.dist import make_rules, shard_map
 from repro.kernels import ops as kops
 from repro.utils import boundaries_from_keys, segment_ids_from_boundaries
-
-
-def _owner_hash(ids, salt, n_dev: int):
-    """Cheap re-drawable ownership hash (Knuth multiplicative)."""
-    x = (ids.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ salt.astype(jnp.uint32)
-    x = (x >> 16) ^ x
-    return (x % jnp.uint32(n_dev)).astype(jnp.int32)
 
 
 def _local_pairs(src, dst, node2super, num_nodes: int):
@@ -121,8 +114,9 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
     replicated ``SummaryState``, θ scalar, and an ownership salt. Returns
     the updated replicated state + global stats.
     """
-    axis_names = tuple(mesh.axis_names)
-    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    rules = make_rules(mesh, "summarize")
+    axis_names = rules.axis_names
+    n_dev = rules.n_devices
     v = num_nodes
     log2v = float(np.log2(max(v, 2)))
 
@@ -130,8 +124,8 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
         e_loc = src_l.shape[0]
         cap = int(e_loc * capacity_factor / n_dev) + 8
         plo, phi, cnt, valid = _local_pairs(src_l, dst_l, state.node2super, v)
-        own_lo = _owner_hash(plo, salt, n_dev)
-        own_hi = _owner_hash(phi, salt, n_dev)
+        own_lo = rules.owner(plo, salt)
+        own_hi = rules.owner(phi, salt)
         b1, of1 = _route(plo, phi, cnt, valid, own_lo, n_dev, cap)
         b2, of2 = _route(plo, phi, cnt, valid & (own_hi != own_lo), own_hi,
                          n_dev, cap)
@@ -153,7 +147,7 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
         else:
             cbar = 2.0 * jnp.log2(s_count) + jnp.log2(jnp.maximum(omega_all, 2.0))
 
-        owned = _owner_hash(jnp.arange(v, dtype=jnp.int32), salt, n_dev) == dev
+        owned = rules.owner(jnp.arange(v, dtype=jnp.int32), salt) == dev
         groups = shingles.build_groups_from_pairs(
             glo, ghi, gvalid, jnp.where(owned, state.size, 0),
             jax.random.fold_in(state.rng, dev), cfg.group_size,
@@ -180,7 +174,7 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
         new_state, nmerges_g = apply_merges(state, a_all, b_all, sel_all)
 
         # ---- exact global metrics over lo-owned pairs --------------------
-        mine = gvalid & (_owner_hash(glo, salt, n_dev) == dev)
+        mine = gvalid & (rules.owner(glo, salt) == dev)
         pi = costs.pair_pi(PairTable(lo=glo, hi=ghi, cnt=gcnt, valid=mine),
                            state.size)
         touched = (state.size[glo] > 1) | (state.size[ghi] > 1)
@@ -217,9 +211,9 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
         )
         return new_state, stats
 
-    spec_e = P(axis_names)
-    spec_r = P()
-    sharded = jax.shard_map(
+    spec_e = rules.edge_spec
+    spec_r = rules.replicated
+    sharded = shard_map(
         step,
         mesh=mesh,
         in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
@@ -290,8 +284,9 @@ def make_distributed_step_compact(mesh, cfg: SummaryConfig, num_nodes: int,
     ``external_groups``: the step takes a precomputed ``groups_all``
     ([G_pad, C], from :func:`make_grouping_fn`) as a sixth argument so the
     grouping can run every ``regroup_every``-th iteration (§Perf iter. C2)."""
-    axis_names = tuple(mesh.axis_names)
-    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    rules = make_rules(mesh, "summarize")
+    axis_names = rules.axis_names
+    n_dev = rules.n_devices
     v = num_nodes
     c = cfg.group_size
     g_total = -(-v // c)
@@ -415,20 +410,20 @@ def make_distributed_step_compact(mesh, cfg: SummaryConfig, num_nodes: int,
             rng=k_next, t=state.t + 1)
         return new_state, stats
 
-    spec_e = P(axis_names)
-    spec_r = P()
+    spec_e = rules.edge_spec
+    spec_r = rules.replicated
     if external_groups:
         def step_ext(src_l, dst_l, state, theta, salt, groups_all):
             return step(src_l, dst_l, state, theta, salt, groups_all)
 
-        sharded = jax.shard_map(
+        sharded = shard_map(
             step_ext, mesh=mesh,
             in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r, spec_r),
             out_specs=(spec_r, spec_r),
             check_vma=False,
         )
     else:
-        sharded = jax.shard_map(
+        sharded = shard_map(
             step, mesh=mesh,
             in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
             out_specs=(spec_r, spec_r),
@@ -451,8 +446,9 @@ def make_grouping_fn(mesh, cfg: SummaryConfig, num_nodes: int,
     Returns a jitted fn: (src_l, dst_l, state) → groups_all [G_pad, C]
     (replicated), with G padded to the mesh device count.
     """
-    axis_names = tuple(mesh.axis_names)
-    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    rules = make_rules(mesh, "summarize")
+    axis_names = rules.axis_names
+    n_dev = rules.n_devices
     v = num_nodes
     c = cfg.group_size
     g_total = -(-v // c)
@@ -473,9 +469,10 @@ def make_grouping_fn(mesh, cfg: SummaryConfig, num_nodes: int,
                 [groups_all, jnp.full((pad_rows, c), -1, jnp.int32)])
         return groups_all
 
-    spec_e = P(axis_names)
-    sharded = jax.shard_map(
-        fn, mesh=mesh, in_specs=(spec_e, spec_e, P()), out_specs=P(),
+    spec_e = rules.edge_spec
+    sharded = shard_map(
+        fn, mesh=mesh, in_specs=(spec_e, spec_e, rules.replicated),
+        out_specs=rules.replicated,
         check_vma=False,
     )
     return jax.jit(sharded)

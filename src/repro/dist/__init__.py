@@ -1,0 +1,42 @@
+"""Distribution substrate shared by the SSumM summarizer and the LM stack.
+
+Three concerns, one vocabulary:
+
+  * :mod:`repro.dist.sharding` — logical-axis → mesh-axis rule tables
+    (``make_rules(mesh, mode)``) consumed by the lowering, dry-run, train,
+    serve, and distributed-summarize paths, plus the supernode ownership
+    hash the edge-sharded step routes with;
+  * :mod:`repro.dist.compress` — int8 / top-k payload codecs with
+    error-feedback buffers for the cross-pod gradient boundary;
+  * :mod:`repro.dist.microbatch` — gradient accumulation that matches the
+    full-batch gradient.
+
+:mod:`repro.dist.compat` isolates the jax-version differences (shard_map
+location, mesh axis types) so the rest of the tree imports one stable API.
+"""
+
+from repro.dist.compat import make_mesh, shard_map
+from repro.dist.compress import (
+    CompressConfig,
+    decode_int8,
+    encode_int8,
+    encode_topk,
+    init_error_buffers,
+    payload_bytes,
+)
+from repro.dist.microbatch import microbatch_grads
+from repro.dist.sharding import MeshRules, make_rules
+
+__all__ = [
+    "CompressConfig",
+    "MeshRules",
+    "decode_int8",
+    "encode_int8",
+    "encode_topk",
+    "init_error_buffers",
+    "make_mesh",
+    "make_rules",
+    "microbatch_grads",
+    "payload_bytes",
+    "shard_map",
+]

@@ -1,0 +1,51 @@
+"""jax version compatibility for the sharding APIs this repo leans on.
+
+The tree targets jax ≥ 0.4.37 but uses three APIs that moved or were
+renamed in later releases:
+
+  * ``shard_map`` — ``jax.experimental.shard_map.shard_map(check_rep=...)``
+    in 0.4.x, promoted to ``jax.shard_map(check_vma=...)`` later;
+  * ``jax.sharding.AxisType`` — does not exist in 0.4.x (all mesh axes are
+    implicitly auto-partitioned there);
+  * ``jax.make_mesh(axis_types=...)`` — the kwarg appears together with
+    ``AxisType``.
+
+Every call site goes through this module so the rest of the tree is
+version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax ≥ 0.5-era API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # 0.4.x: axes are auto-typed, nothing to request
+    AxisType = None
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with the replication-check kwarg of either era."""
+    kwargs = {} if check_vma is None else {_CHECK_KWARG: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API wants them."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(
+                shape, axis_names, axis_types=(AxisType.Auto,) * len(axis_names)
+            )
+        except TypeError:  # AxisType importable but kwarg not accepted
+            pass
+    return jax.make_mesh(shape, axis_names)

@@ -1,0 +1,52 @@
+"""Microbatched gradient accumulation.
+
+``microbatch_grads`` splits the global batch into ``accum`` equal
+microbatches along the leading axis, runs value-and-grad per microbatch
+under ``lax.scan`` (one microbatch of activations live at a time — the
+memory point of accumulation), and averages losses/aux/grads. Gradients
+are accumulated in float32 regardless of the parameter dtype and cast back
+at the end, so ``accum=k`` reproduces the ``accum=1`` gradient up to
+rounding of the final cast.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatch_grads(loss_fn, params, batch, accum: int = 1):
+    """Accumulated gradients of ``loss_fn`` over ``accum`` microbatches.
+
+    ``loss_fn(params, batch) -> (loss, aux)`` (aux: dict of scalar
+    metrics). Returns ``(loss, aux, grads)`` — the means over microbatches;
+    with equal microbatch sizes these equal the full-batch quantities.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if accum <= 1:
+        (loss, aux), grads = grad_fn(params, batch)
+        return loss, aux, grads
+
+    def split(x):
+        b = x.shape[0]
+        if b % accum != 0:
+            raise ValueError(
+                f"leading batch dim {b} not divisible by accum={accum}"
+            )
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(g_acc, mb):
+        (loss, aux), grads = grad_fn(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / accum, g_acc, grads
+        )
+        return g_acc, (loss, aux)
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    g_sum, (losses, auxes) = jax.lax.scan(body, zeros, micro)
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), g_sum, params)
+    loss = jnp.mean(losses)
+    aux = jax.tree.map(lambda x: jnp.mean(x, axis=0), auxes)
+    return loss, aux, grads

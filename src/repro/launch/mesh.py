@@ -4,20 +4,19 @@ touches jax device state (the dry-run sets XLA_FLAGS before any jax import).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 v5e pod (data, model) or 2 pods (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh over host CPU devices (tests)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_device_count(mesh) -> int:

@@ -131,9 +131,15 @@ def main(argv=None) -> dict:
     accum = max(args.accum, plan.accum_steps)
     step_fn = build_train_step(model, rules, run, accum)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
-    from repro.dist.compress import init_error_buffers
+    from repro.dist.compress import init_error_buffers, payload_bytes
 
     err = init_error_buffers(params) if args.compress == "topk" else None
+    if args.compress != "none":
+        ccfg = CompressConfig(args.compress, topk_ratio=run.topk_ratio)
+        full = payload_bytes(params, CompressConfig("none"))
+        wire = payload_bytes(params, ccfg)
+        print(f"grad compression {args.compress}: {full/2**20:.1f} MiB "
+              f"-> {wire/2**20:.1f} MiB per all-reduce payload")
 
     # ---- fault tolerance ---------------------------------------------------
     start_step = 0

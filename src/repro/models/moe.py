@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.dist import shard_map
 from repro.models.common import Px, dense_init
 from repro.utils import boundaries_from_keys, rank_in_segment
 
@@ -35,6 +36,26 @@ def init_moe(key, cfg, dtype=jnp.bfloat16, ep: int = 16):
         "wg": Px(dense_init(ks[2], (e, d, f), 1, dtype), ("experts", "embed", "ff")),
         "wo": Px(dense_init(ks[3], (e, f, d), 1, dtype), ("experts", "ff", "embed")),
     }
+
+
+def _router_probs(router_w, xt, e_real: int):
+    """Masked router softmax in f32 (padding experts get -inf logits)."""
+    e_pad = router_w.shape[-1]
+    logits = xt.astype(jnp.float32) @ router_w
+    if e_pad > e_real:
+        logits = jnp.where(jnp.arange(e_pad)[None, :] >= e_real, -1e30, logits)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _load_balance_aux(probs, e_real: int):
+    """Switch-style load-balance loss from the (masked) router probs."""
+    e_pad = probs.shape[-1]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, axis=-1), e_pad, dtype=jnp.float32),
+        axis=0,
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    return e_real * jnp.sum(frac_tokens * frac_probs)
 
 
 def apply_moe(p, x, cfg, rules=None, capacity_factor: float | None = None):
@@ -67,11 +88,7 @@ def apply_moe_gspmd(p, x, cfg, rules=None, capacity_factor: float | None = None)
         cap = max(int(k * n * cf / e_real), 1)
 
     xt = x.reshape(n, d)
-    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
-    if e_pad > e_real:  # mask padding experts
-        pad_mask = jnp.arange(e_pad) >= e_real
-        logits = jnp.where(pad_mask[None, :], -1e30, logits)
-    probs = jax.nn.softmax(logits, axis=-1)
+    probs = _router_probs(p["router"], xt, e_real)
     top_w, top_e = jax.lax.top_k(probs, k)  # [N, k]
     top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
 
@@ -102,20 +119,18 @@ def apply_moe_gspmd(p, x, cfg, rules=None, capacity_factor: float | None = None)
         y_e = rules.constrain(y_e, "experts", None, None)
 
     # ---- combine back to token order ------------------------------------
+    # clamped gather, no sentinel row: dropped records read a live row and
+    # are masked to an exact 0 (select, not multiply — robust to inf/nan
+    # in expert outputs). A concat-then-gather sentinel here is miscompiled
+    # by the XLA SPMD partitioner on meshes with a data axis — every output
+    # gets multiplied by the data-axis size.
     y_flat = y_e.reshape(e_pad * cap, d)
-    src = jnp.where(ok, flat, e_pad * cap)
-    gathered = jnp.concatenate([y_flat, jnp.zeros((1, d), x.dtype)])[
-        jnp.minimum(src, e_pad * cap)
-    ]
-    contrib = gathered.astype(jnp.float32) * jnp.where(ok, w_s, 0.0)[:, None]
+    src = jnp.where(ok, flat, 0)
+    gathered = jnp.where(ok[:, None], y_flat[src].astype(jnp.float32), 0.0)
+    contrib = gathered * jnp.where(ok, w_s, 0.0)[:, None]
     y = jnp.zeros((n, d), jnp.float32).at[t_s].add(contrib)
 
-    # Switch-style load-balance aux loss
-    frac_tokens = jnp.mean(
-        jax.nn.one_hot(top_e[:, 0], e_pad, dtype=jnp.float32), axis=0
-    )
-    frac_probs = jnp.mean(probs, axis=0)
-    aux_loss = e_real * jnp.sum(frac_tokens * frac_probs)
+    aux_loss = _load_balance_aux(probs, e_real)
     dropped = jnp.sum(~ok) / jnp.maximum(n * k, 1)
     return y.reshape(b, s, d).astype(x.dtype), {
         "moe_aux": aux_loss,
@@ -149,7 +164,7 @@ def apply_moe_gspmd(p, x, cfg, rules=None, capacity_factor: float | None = None)
 
 def _dispatch_to_buckets(vals, keys, n_buckets: int, cap: int, fill=0.0):
     """Scatter ``vals`` rows into [n_buckets, cap, ...] by ``keys`` (sorted
-    stable order); returns (buckets, flat_slot_per_row, ok_mask)."""
+    stable order); returns (buckets, sort_order, flat_slot_per_row, ok_mask)."""
     order = jnp.argsort(keys, stable=True)
     k_s = keys[order]
     slot = rank_in_segment(boundaries_from_keys(k_s))
@@ -194,11 +209,7 @@ def apply_moe_a2a(p, x, cfg, rules, capacity_factor: float | None = None):
         cap_e = max(int(2 * ep * cap_r / e_local), 1)  # local per-expert
 
         xt = xl.reshape(n_l, d)
-        logits = (xt.astype(jnp.float32) @ params["router"])
-        if e_pad > e_real:
-            logits = jnp.where(jnp.arange(e_pad)[None, :] >= e_real, -1e30,
-                               logits)
-        probs = jax.nn.softmax(logits, axis=-1)
+        probs = _router_probs(params["router"], xt, e_real)
         top_w, top_e = jax.lax.top_k(probs, k)
         top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
 
@@ -245,29 +256,32 @@ def apply_moe_a2a(p, x, cfg, rules, capacity_factor: float | None = None):
             ok, rec_w[order], 0.0)[:, None]
         y = jnp.zeros((n_l, d), jnp.float32).at[rec_t[order]].add(contrib)
 
-        # ---- aux (globally averaged for replicated consistency) -------------
-        frac_tokens = jnp.mean(
-            jax.nn.one_hot(top_e[:, 0], e_pad, dtype=jnp.float32), axis=0)
-        frac_probs = jnp.mean(probs, axis=0)
+        # ---- drop accounting (metric only — no gradient) --------------------
         # token shards vary over dp axes AND the EP ("model") axis
         all_axes = dp_axes + ("model",)
-        aux = e_real * jnp.sum(
-            jax.lax.pmean(frac_tokens, all_axes)
-            * jax.lax.pmean(frac_probs, all_axes))
         drop1 = jnp.sum(~ok) / jnp.maximum(n_l * k, 1)
         # ok2 is False for both overflowed AND padding slots — only count
         # slots that carried a real token (recv_eid ≥ 0)
         n_valid2 = jnp.sum(recv_eid >= 0)
         drop2 = (n_valid2 - jnp.sum(ok2)) / jnp.maximum(n_l * k, 1)
-        dropped = jax.lax.pmean(drop1 + drop2, all_axes)
-        return y.reshape(b_l, s_l, d).astype(xl.dtype), aux, dropped
+        dropped = jax.lax.stop_gradient(
+            jax.lax.pmean(drop1 + drop2, all_axes))
+        return y.reshape(b_l, s_l, d).astype(xl.dtype), dropped
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         body, mesh=mesh,
         in_specs=(p_specs, x_spec),
-        out_specs=(x_spec, P(), P()),
+        out_specs=(x_spec, P()),
     )
-    y, aux, dropped = sharded(
+    y, dropped = sharded(
         {k_: p[k_] for k_ in ("router", "wi", "wg", "wo")}, x
     )
+
+    # Load-balance aux loss, recomputed outside the shard_map from the
+    # (replicated) router: per-token quantities mean-reduce identically to
+    # the per-shard pmean, the router matmul is cheap, and the shard_map
+    # keeps y as its only differentiable output — this jax's shard_map
+    # transpose cannot take symbolic-zero cotangents for extra outputs.
+    xt = x.reshape(-1, x.shape[-1])
+    aux = _load_balance_aux(_router_probs(p["router"], xt, e_real), e_real)
     return y, {"moe_aux": aux, "moe_drop_frac": dropped}

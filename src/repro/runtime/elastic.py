@@ -5,7 +5,7 @@ the best (pod, data, model) factorization for the survivor count, keeping
 the model axis as close as possible to the original TP degree (params must
 still fit) and folding everything else into data parallelism. The global
 batch is preserved by scaling per-device batch (gradient accumulation picks
-up any remainder — see dist/accumulate.py).
+up any remainder — see dist/microbatch.py).
 
 ``PreemptionGuard`` turns SIGTERM/SIGINT into a cooperative "save and exit"
 flag that the train loop polls once per step — the checkpoint manager's
@@ -17,9 +17,9 @@ from __future__ import annotations
 import dataclasses
 import signal
 
-import jax
 import numpy as np
-from jax.sharding import AxisType
+
+from repro.dist.compat import make_mesh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,9 +74,7 @@ def plan_mesh(
 
 
 def make_mesh_from_plan(plan: MeshPlan):
-    return jax.make_mesh(
-        plan.shape, plan.axes, axis_types=(AxisType.Auto,) * len(plan.axes)
-    )
+    return make_mesh(plan.shape, plan.axes)
 
 
 class PreemptionGuard:

@@ -1,0 +1,123 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test image has no network access, so ``hypothesis`` may be absent;
+``conftest.py`` installs this module into ``sys.modules`` in that case.
+It implements just the surface the property tests here use — ``given``,
+``settings``, and the ``integers`` / ``floats`` / ``sampled_from`` /
+``data`` strategies — and turns each property into ``max_examples``
+deterministic cases drawn from a per-example seeded RNG, so the
+properties still execute as plain pytest tests (with less adversarial
+search than real hypothesis shrinking, but the same assertions).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(2)))
+
+
+class DataObject:
+    """Interactive draws (``st.data()``) against the example's RNG."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        del label
+        return strategy.example_from(self._rng)
+
+
+def data():
+    return Strategy(lambda rng: DataObject(rng))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        params = [
+            p
+            for p in inspect.signature(fn).parameters.values()
+            if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+        ]
+        # hypothesis binds positional strategies to the RIGHTMOST params
+        # (leftmost stay free for pytest fixtures) — match that
+        tail = params[len(params) - len(arg_strategies):]
+        positional = {p.name: s for p, s in zip(tail, arg_strategies)}
+
+        strategies = {**positional, **kw_strategies}
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above @given (attribute lands on wrapper)
+            # or below it (attribute lands on fn, copied here by wraps)
+            conf = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", {}
+            )
+            n = conf.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng(1000 + i)
+                drawn = {
+                    name: s.example_from(rng)
+                    for name, s in strategies.items()
+                }
+                fn(*args, **drawn, **kwargs)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(
+            [p for p in params if p.name not in strategies]
+        )
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+``.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "data"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,14 @@
+"""Test-session setup: fall back to the deterministic hypothesis stub when
+the real library is unavailable (no-network test images)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    import hypothesis  # noqa: F401  (prefer the real library when present)
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
