@@ -5,22 +5,29 @@ compile time is excluded (one warm-up run at the smallest size, then every
 size reuses the same compiled iteration because shapes enter the jit cache
 per size — we therefore report the *second* run per size). A least-squares
 fit of time vs |E| reports R² against the linear model.
+
+``--distributed`` runs the edge-sharded pipeline instead (merge rounds +
+the distributed sparsify tail, DESIGN.md §7) over ``--devices`` placeholder
+host devices and reports the sparsify phase's wall time separately — the
+scalability story the single-host mode cannot exercise.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
 
 from benchmarks.common import emit, save_artifact
-from repro.core import SummaryConfig, summarize
 from repro.graphs import generate
 
 
 def run(dataset="amazon0601", scales=(0.01, 0.02, 0.04, 0.08), T=5,
         seed=0, k_frac=0.3) -> list[dict]:
+    from repro.core import SummaryConfig, summarize
+
     rows = []
     for sc in scales:
         src, dst, v = generate(dataset, seed=seed, scale=sc)
@@ -48,6 +55,45 @@ def run(dataset="amazon0601", scales=(0.01, 0.02, 0.04, 0.08), T=5,
     return rows
 
 
+def run_distributed(dataset="amazon0601", scales=(0.01, 0.02), T=5, seed=0,
+                    k_frac=0.3, devices=8) -> list[dict]:
+    """Edge-sharded pipeline per scale: merge rounds + the distributed
+    sparsify tail (psum'd histogram order statistic). The sparsify phase
+    is timed separately so its scaling is visible next to the merge loop's.
+    """
+    from repro.core import SummaryConfig
+    from repro.core.types import make_graph
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.summarize import (
+        build_distributed_pipeline,
+        run_distributed as run_dist_pipeline,
+    )
+
+    mesh = make_host_mesh((devices,), ("data",))
+    rows = []
+    for sc in scales:
+        src, dst, v = generate(dataset, seed=seed, scale=sc)
+        cfg = SummaryConfig(T=T, k_frac=k_frac, seed=seed)
+        graph, _ = make_graph(src, dst, v)
+        # one jitted pipeline per size, reused so the timed run hits the
+        # jit cache (fresh closures would retrace + recompile every call)
+        pipe = build_distributed_pipeline(mesh, cfg, v, graph.num_edges)
+        run_dist_pipeline(src, dst, v, cfg, mesh, pipeline=pipe)  # warm-up
+        t0 = time.perf_counter()
+        _state, stats, size_g = run_dist_pipeline(src, dst, v, cfg, mesh,
+                                                  pipeline=pipe)
+        dt = time.perf_counter() - t0
+        r = {"bench": "fig6_distributed", "dataset": dataset, "scale": sc,
+             "V": v, "E": len(src), "T": T, "devices": devices,
+             "wall_s": dt, "sparsify_wall_s": stats["sparsify_wall_s"],
+             "rel_size": stats["size_bits"] / size_g, "re1": stats["re1"],
+             "superedges_dropped": stats["dropped"]}
+        rows.append(r)
+        emit(r)
+    save_artifact("fig6_scalability_distributed", rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dataset", default="amazon0601")
@@ -55,8 +101,21 @@ def main() -> None:
                     default=[0.01, 0.02, 0.04, 0.08])
     ap.add_argument("--T", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true",
+                    help="edge-sharded pipeline incl. the sparsify tail")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="placeholder host devices for --distributed")
     args = ap.parse_args()
-    run(args.dataset, tuple(args.scales), args.T, args.seed)
+    if args.distributed:
+        # must precede the first jax backend init (device count is locked
+        # then); harmless if the user already exported their own flags
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+        run_distributed(args.dataset, tuple(args.scales), args.T, args.seed,
+                        devices=args.devices)
+    else:
+        run(args.dataset, tuple(args.scales), args.T, args.seed)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import SummaryConfig
 from repro.core.distributed import (
+    make_distributed_sparsify,
     make_distributed_step_compact,
     pad_and_shard_edges,
 )
@@ -65,6 +66,18 @@ def main():
             if float(stats["size_bits"]) <= k_bits:
                 print("  budget reached")
                 break
+
+        # Sect. 3.2.4 tail: edge-sharded drop-to-k (distributed ξ-th order
+        # statistic — no host-side gather; DESIGN.md §7)
+        sp = make_distributed_sparsify(mesh, cfg, v, e, capacity_factor=32.0)
+        sp_stats, _pairs = sp(src_p, dst_p, state,
+                              jnp.asarray(k_bits, jnp.float32),
+                              jnp.asarray(cfg.T + 1, jnp.uint32))
+        print(f"sparsify: ξ={int(float(sp_stats['xi']))} "
+              f"dropped={int(float(sp_stats['dropped']))} superedges → "
+              f"size={float(sp_stats['size_bits']):12,.0f} bits "
+              f"({100 * float(sp_stats['size_bits']) / size_g:5.1f}%) "
+              f"RE₁={float(sp_stats['re1']):.4f}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,14 @@ Scheme (DESIGN.md §7):
 Bucket overflow (records beyond capacity) is counted and reported in the
 stats — with the default capacity factor the shuffle is exact; tests verify
 equality with the single-device pair table on multihost CPU meshes.
+
+The final drop-to-k-bits phase (Sect. 3.2.4) is edge-sharded too
+(:func:`make_distributed_sparsify`, DESIGN.md §7): pairs are exchanged to
+their *lo* owner only (each pair counted exactly once), the ξ-th smallest
+ΔRE is found by the psum'd histogram selection of
+:func:`repro.core.sparsify.radix_select_kth` instead of a replicated sort,
+and the resulting drop mask stays sharded — the whole pipeline
+(merge → sparsify → metrics) runs without gathering edges to one host.
 """
 
 from __future__ import annotations
@@ -37,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costs, shingles, tables
+from repro.core import costs, shingles, sparsify, tables
 from repro.core.merge import apply_merges, select_matching
 from repro.core.types import PairTable, SummaryConfig, SummaryState
 from repro.dist import make_rules, shard_map
@@ -218,6 +226,132 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
         mesh=mesh,
         in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
         out_specs=(spec_r, spec_r),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+def make_distributed_sparsify(mesh, cfg: SummaryConfig, num_nodes: int,
+                              num_edges_global: int,
+                              capacity_factor: float = 4.0):
+    """Build the jit-able edge-sharded *further sparsification* phase.
+
+    Call signature: ``(src_l, dst_l, state, k_bits, salt) → (stats, pairs)``
+    with padded edge shards, the replicated post-merge ``SummaryState``, the
+    bit budget ``k`` (float32 scalar), and an ownership salt.
+
+    Scheme (DESIGN.md §7):
+      * pair records are routed to the **lo-endpoint owner only** — unlike
+        the merge round no co-location of both endpoints is needed, each
+        pair just has to be counted exactly once somewhere;
+      * the ξ-th smallest ΔRE_p (footnote 4) is found by 4 radix passes of
+        a ``psum``-ed 256-bin histogram over the order-preserving uint32
+        image of the deltas (:mod:`repro.core.sparsify`) — 4 KiB of
+        collective traffic replacing a replicated O(E log E) sort;
+      * since Δ, ξ and the selected threshold Δ_ξ are globally identical,
+        the shard-local masks ``delta ≤ Δ_ξ`` compose into a globally
+        consistent drop mask, bit-identical to single-host
+        :func:`repro.core.sparsify.further_sparsify`.
+
+    ``stats`` is replicated (size/RE before and after the drop, ξ, drop
+    count, overflow); ``pairs`` is the still-sharded per-pair table
+    (lo, hi, cnt, keep, drop, mine) for downstream consumers — nothing is
+    gathered to one host.
+    """
+    rules = make_rules(mesh, "summarize")
+    axis_names = rules.axis_names
+    n_dev = rules.n_devices
+    v = num_nodes
+    log2v = float(np.log2(max(v, 2)))
+
+    def psum_hist(h):
+        return jax.lax.psum(h, axis_names)
+
+    def run(src_l, dst_l, state: SummaryState, k_bits, salt):
+        e_loc = src_l.shape[0]
+        cap = int(e_loc * capacity_factor / n_dev) + 8
+        dev = jax.lax.axis_index(axis_names)
+
+        # ---- pair exchange: each pair to its lo owner, counted once ------
+        plo, phi, cnt, valid = _local_pairs(src_l, dst_l, state.node2super, v)
+        own_lo = rules.owner(plo, salt)
+        buck, of = _route(plo, phi, cnt, valid, own_lo, n_dev, cap)
+        recv = jax.lax.all_to_all(
+            buck, axis_names, split_axis=0, concat_axis=0, tiled=True
+        )
+        glo, ghi, gcnt, gvalid = _aggregate(recv.reshape(-1, 3), v)
+        mine = gvalid & (rules.owner(glo, salt) == dev)
+
+        # ---- pre-drop metrics (identical to costs.summary_metrics) -------
+        s_count = jnp.maximum(jnp.sum(state.size > 0).astype(jnp.float32), 2.0)
+        pt = PairTable(lo=glo, hi=ghi, cnt=gcnt, valid=mine)
+        pi = costs.pair_pi(pt, state.size)
+        omega_all = jax.lax.pmax(jnp.max(jnp.where(mine, gcnt, 0.0)),
+                                 axis_names)
+        cbar = costs.cbar_value(cfg.cbar_mode, v, num_edges_global, s_count,
+                                omega_all)
+        glo_c = jnp.clip(glo, 0, v - 1)
+        ghi_c = jnp.clip(ghi, 0, v - 1)
+        touched = (state.size[glo_c] > 1) | (state.size[ghi_c] > 1)
+        decided = costs.keep_superedge(gcnt, pi, cbar, jnp.float32(log2v),
+                                       cfg.re_guard)
+        keep = jnp.where(touched, decided, gcnt > 0.0) & mine
+        cntk = jnp.where(keep, gcnt, 0.0)
+        p_total = jax.lax.psum(jnp.sum(keep.astype(jnp.float32)), axis_names)
+        w_total = jax.lax.pmax(jnp.max(cntk), axis_names)
+        log2s = jnp.log2(jnp.maximum(s_count, 2.0))
+        size_before = p_total * (2.0 * log2s
+                                 + jnp.log2(jnp.maximum(w_total, 2.0))
+                                 ) + v * log2s
+
+        # ---- ξ and the distributed order statistic -----------------------
+        delta = sparsify.sparsify_deltas(gcnt, pi, cfg.error_p)
+        xi = sparsify.sparsify_xi(size_before, k_bits, s_count, w_total)
+        delta_xi = sparsify.select_delta_xi(delta, keep, xi,
+                                            reduce_hist=psum_hist)
+        drop = sparsify.drop_from_threshold(keep, delta, delta_xi, xi,
+                                            p_total.astype(jnp.int32))
+
+        # ---- post-drop metrics (Eq. 4 / Eq. 2 closed forms) --------------
+        keep2 = keep & ~drop
+        cntk2 = jnp.where(keep2, gcnt, 0.0)
+        sigma2 = jnp.where(keep2, gcnt / jnp.maximum(pi, 1.0), 0.0)
+        p2 = jax.lax.psum(jnp.sum(keep2.astype(jnp.float32)), axis_names)
+        w2 = jax.lax.pmax(jnp.max(cntk2), axis_names)
+        size_after = p2 * (2.0 * log2s + jnp.log2(jnp.maximum(w2, 2.0))
+                           ) + v * log2s
+        dropped_cnt = jnp.where(mine & ~keep2, gcnt, 0.0)
+        re1_sum = jax.lax.psum(
+            jnp.sum(2.0 * cntk2 * (1.0 - sigma2)) + jnp.sum(dropped_cnt),
+            axis_names)
+        re2_sq = jax.lax.psum(
+            jnp.sum(cntk2 * (1.0 - sigma2)) + jnp.sum(dropped_cnt),
+            axis_names)
+        denom = float(v) * (v - 1.0)
+        stats = {
+            "size_bits": size_after,
+            "size_bits_before": size_before,
+            "re1": 2.0 * re1_sum / denom,
+            "re2": jnp.sqrt(2.0 * re2_sq) / denom,
+            "num_superedges": p2,
+            "num_supernodes": s_count,
+            "omega_max": w2,
+            "xi": xi.astype(jnp.float32),
+            "dropped": jax.lax.psum(jnp.sum(drop.astype(jnp.float32)),
+                                    axis_names),
+            "overflow": jax.lax.psum(of, axis_names),
+        }
+        pairs = {"lo": glo, "hi": ghi, "cnt": gcnt, "keep": keep2,
+                 "drop": drop, "mine": mine}
+        return stats, pairs
+
+    spec_e = rules.edge_spec
+    spec_r = rules.replicated
+    sharded = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(spec_e, spec_e, spec_r, spec_r, spec_r),
+        out_specs=(spec_r, spec_e),
         check_vma=False,
     )
     return jax.jit(sharded)

@@ -179,13 +179,47 @@ def _mode_table(mesh, mode: str) -> dict:
     return table
 
 
+def _validate_override(mesh, key: str, val) -> None:
+    """An override must name real axes of *this* mesh (or None).
+
+    Without this check a typo'd axis (``seq=modell``) silently replicates
+    the dimension — ``MeshRules.spec`` drops unknown axes by design for
+    shape-guarding, which is exactly wrong for user-supplied overrides.
+    """
+    if val is None:
+        return
+    if isinstance(val, str):
+        axes = (val,)
+    elif isinstance(val, (tuple, list)):
+        axes = tuple(val)
+    else:
+        raise ValueError(
+            f"override {key!r}={val!r}: expected a mesh axis name, a "
+            f"tuple of names, or None; got {type(val).__name__}"
+        )
+    mesh_axes = tuple(mesh.axis_names)
+    for ax in axes:
+        if not isinstance(ax, str) or ax not in mesh_axes:
+            raise ValueError(
+                f"override {key!r}={val!r}: {ax!r} is not an axis of this "
+                f"mesh; mesh axes: {mesh_axes}"
+            )
+    if len(set(axes)) != len(axes):
+        raise ValueError(
+            f"override {key!r}={val!r} names a mesh axis more than once"
+        )
+
+
 def make_rules(mesh, mode: str, *, overrides: Mapping[str, Any] | None = None,
                ) -> MeshRules:
     """Build the rule table for ``mesh`` in ``mode``.
 
     ``overrides`` remaps individual logical names (value: mesh axis name,
     tuple of names, or None to replicate) — the dry-run's perf-iteration
-    knobs (``seq=model``, ``batch=data+model``, …) come through here.
+    knobs (``seq=model``, ``batch=data+model``, …) come through here. Keys
+    must be known logical names and values must name axes of ``mesh``;
+    both are validated eagerly with a KeyError/ValueError rather than
+    silently replicating the dimension.
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
@@ -195,5 +229,6 @@ def make_rules(mesh, mode: str, *, overrides: Mapping[str, Any] | None = None,
             raise KeyError(
                 f"unknown logical axis {key!r}; known: {sorted(table)}"
             )
+        _validate_override(mesh, key, val)
         table[key] = val
     return MeshRules(mesh=mesh, mode=mode, table=table)

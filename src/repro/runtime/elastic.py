@@ -64,6 +64,10 @@ def plan_mesh(
     dp = pods * data
     if global_batch % dp == 0:
         per_dev, accum = global_batch // dp, 1
+    elif global_batch < dp:
+        # fewer examples than DP shards (e.g. the summarize driver's
+        # batch-free plan): one per device, no accumulation
+        per_dev, accum = 1, 1
     else:
         # smallest accumulation count that makes microbatches divide evenly
         accum = next(a for a in range(2, global_batch + 1)

@@ -1,0 +1,181 @@
+"""Further-sparsification unit tests (Sect. 3.2.4): the footnote-4 delta
+orderings, the ξ degenerate branches, and the histogram order-statistic
+backend (radix_select_kth) that the distributed path psums."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SummaryConfig, costs, sparsify, summarize
+from repro.core.types import SummaryState, make_graph
+from repro.graphs import generate
+
+
+def _graph_and_state(seed=0, v=60, e_target=320, n_groups=14):
+    """Random graph + random canonical partition (exact supernode sizes)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e_target)
+    dst = rng.integers(0, v, e_target)
+    keep = src != dst
+    graph, _ = make_graph(src[keep], dst[keep], v)
+    groups = rng.integers(0, n_groups, v)
+    reps = np.full(n_groups, -1, np.int64)
+    n2s = np.zeros(v, np.int64)
+    for u in range(v):
+        g = groups[u]
+        if reps[g] < 0:
+            reps[g] = u
+        n2s[u] = reps[g]
+    size = np.bincount(n2s, minlength=v)
+    state = SummaryState(
+        node2super=jnp.asarray(n2s, jnp.int32),
+        size=jnp.asarray(size, jnp.int32),
+        rng=jnp.zeros((2,), jnp.uint32),
+        t=jnp.asarray(1, jnp.int32),
+    )
+    return graph, state, v, graph.num_edges
+
+
+def _merged_state(seed=0, scale=0.05, T=5):
+    """Partition after real merge rounds — many MDL-kept superedges, unlike
+    a random partition (which the Eq. 11 rule rejects almost entirely)."""
+    src, dst, v = generate("ego-facebook", seed=seed, scale=scale)
+    graph, _ = make_graph(src, dst, v)
+    res = summarize(src, dst, v,
+                    SummaryConfig(T=T, k_frac=0.5, seed=seed,
+                                  ensure_budget=False))
+    state = SummaryState(
+        node2super=jnp.asarray(res.node2super),
+        size=jnp.asarray(res.super_size),
+        rng=jnp.zeros((2,), jnp.uint32),
+        t=jnp.asarray(T, jnp.int32),
+    )
+    return graph, state, v, graph.num_edges
+
+
+# ---------------------------------------------------------------------------
+# degenerate ξ branches
+# ---------------------------------------------------------------------------
+
+
+def test_xi_zero_budget_already_met():
+    """k ≥ Size(Ḡ) → ξ = 0 → no superedge is dropped, metrics unchanged."""
+    graph, state, v, e = _graph_and_state(seed=1)
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    before = costs.summary_metrics(pt, state, v, e)
+    k_bits = float(before["size_bits"]) * 2.0
+    drop, after = sparsify.further_sparsify(pt, state, v, e, k_bits)
+    assert not bool(jnp.any(drop))
+    assert float(after["size_bits"]) == float(before["size_bits"])
+    assert float(after["re1"]) == float(before["re1"])
+    assert float(after["num_superedges"]) == float(before["num_superedges"])
+
+
+def test_xi_exceeds_p_count_drops_everything():
+    """k below even the membership term → ξ ≥ |P| → every kept superedge
+    goes; what remains is the |V|log₂|S| membership encoding."""
+    graph, state, v, e = _graph_and_state(seed=2)
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    before = costs.summary_metrics(pt, state, v, e)
+    drop, after = sparsify.further_sparsify(pt, state, v, e, k_bits=1.0)
+    np.testing.assert_array_equal(np.asarray(drop), np.asarray(before["keep"]))
+    assert float(after["num_superedges"]) == 0.0
+    assert float(after["size_bits"]) == float(after["membership_bits"])
+    # every subedge is now unexplained: RE₁ = 2|E|/(|V|(|V|-1))
+    np.testing.assert_allclose(float(after["re1"]),
+                               2.0 * e / (v * (v - 1.0)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ΔRE_p ordering (footnote 4), p ∈ {1, 2}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("error_p", [1, 2])
+def test_drop_set_is_minimum_delta_prefix(error_p):
+    """Dropped superedges are exactly a ≤-prefix of the ΔRE_p order: every
+    dropped delta ≤ every surviving delta, and at least ξ are dropped."""
+    graph, state, v, e = _merged_state(seed=0)
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    before = costs.summary_metrics(pt, state, v, e)
+    k_bits = 0.7 * float(before["size_bits"])
+    drop, after = sparsify.further_sparsify(pt, state, v, e, k_bits,
+                                            error_p=error_p)
+    keep = np.asarray(before["keep"])
+    dropped = np.asarray(drop)
+    assert dropped.sum() > 0 and (keep & ~dropped).sum() > 0
+    assert not (dropped & ~keep).any()  # only kept superedges can drop
+
+    pi = np.asarray(costs.pair_pi(pt, state.size))
+    cnt = np.asarray(pt.cnt)
+    sigma = cnt / np.maximum(pi, 1.0)
+    delta = (2.0 * sigma - 1.0) * cnt if error_p == 1 else cnt * sigma
+    assert delta[dropped].max() <= delta[keep & ~dropped].min()
+
+    xi = int(sparsify.sparsify_xi(before["size_bits"], k_bits,
+                                  before["num_supernodes"],
+                                  before["omega_max"]))
+    assert dropped.sum() >= xi  # ties at the threshold may exceed ξ
+    assert float(after["size_bits"]) <= k_bits * (1 + 1e-6)
+
+
+def test_error_p_changes_the_ordering():
+    """ΔRE₁ = (2σ−1)|E_AB| and ΔRE₂² = σ|E_AB| rank pairs differently:
+    a sparse heavy superedge (σ small, cnt big) is cheap to drop under p=1
+    (negative delta) but expensive under p=2."""
+    cnt = jnp.asarray([9.0, 2.0])
+    pi = jnp.asarray([100.0, 2.0])  # σ = 0.09 vs 1.0
+    d1 = np.asarray(sparsify.sparsify_deltas(cnt, pi, 1))
+    d2 = np.asarray(sparsify.sparsify_deltas(cnt, pi, 2))
+    assert d1[0] < d1[1]  # p=1 drops the sparse heavy pair first
+    assert d2[0] < d2[1] or d2[0] == pytest.approx(0.81)
+    np.testing.assert_allclose(d1, [(2 * 0.09 - 1) * 9.0, 2.0], rtol=1e-5)
+    np.testing.assert_allclose(d2, [0.81, 2.0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# histogram selection backend ≡ sort backend
+# ---------------------------------------------------------------------------
+
+
+def test_ordered_key_monotone_roundtrip():
+    x = jnp.asarray([-3.5, -0.0, 0.0, 1e-20, 7.25, -1e9, 3.4e38],
+                    jnp.float32)
+    keys = sparsify.ordered_key_from_f32(x)
+    back = sparsify.f32_from_ordered_key(keys)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    order_f = np.argsort(np.asarray(x), kind="stable")
+    order_k = np.argsort(np.asarray(keys), kind="stable")
+    np.testing.assert_array_equal(np.asarray(x)[order_f],
+                                  np.asarray(x)[order_k])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_radix_select_matches_sort(seed):
+    rng = np.random.default_rng(seed)
+    n = 257
+    vals = rng.normal(0.0, 100.0, n).astype(np.float32)
+    vals[rng.random(n) < 0.3] = rng.choice([-2.0, 0.0, 5.5])  # duplicates
+    valid = rng.random(n) < 0.8
+    ordered = np.sort(vals[valid])
+    keys = sparsify.ordered_key_from_f32(jnp.asarray(vals))
+    for k in [0, 1, len(ordered) // 2, len(ordered) - 1]:
+        got = sparsify.radix_select_kth(keys, jnp.asarray(valid),
+                                        jnp.int32(k))
+        got_f = float(sparsify.f32_from_ordered_key(got))
+        assert got_f == ordered[k], (k, got_f, ordered[k])
+
+
+def test_select_delta_xi_matches_sort_threshold():
+    """The histogram Δ_ξ equals the sort-based order[ξ−1] on real deltas."""
+    graph, state, v, e = _merged_state(seed=0)
+    pt = costs.build_pair_table(graph.src, graph.dst, state)
+    m = costs.summary_metrics(pt, state, v, e)
+    keep = m["keep"]
+    pi = costs.pair_pi(pt, state.size)
+    delta = sparsify.sparsify_deltas(pt.cnt, pi, 1)
+    p_count = int(m["num_superedges"])
+    for xi in [1, 2, p_count // 2, p_count]:
+        want = float(jnp.sort(jnp.where(keep, delta, jnp.inf))[xi - 1])
+        got = float(sparsify.select_delta_xi(delta, keep, jnp.int32(xi)))
+        assert got == want, (xi, got, want)
