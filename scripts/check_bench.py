@@ -1,0 +1,96 @@
+"""Bench regression gate (CI): fig6 wall-clock vs the committed baseline.
+
+Compares the `fig6` rows of `artifacts/bench/fig6_scalability.json`
+against `benchmarks/baselines/fig6_baseline.json` by (dataset, scale) and
+exits 1 if any scale regressed by more than --tolerance (default 25%)
+*and* by more than --min-delta-s (absolute noise floor — sub-second CI
+timings jitter far more than 25%). `--update` rewrites the baseline from
+the current artifact instead (how the baseline was seeded).
+
+Run after the benchmark:  python scripts/check_bench.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "artifacts", "bench", "fig6_scalability.json")
+BASELINE = os.path.join(ROOT, "benchmarks", "baselines",
+                        "fig6_baseline.json")
+
+
+def _rows(path: str) -> dict[tuple, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {(r["dataset"], r["scale"]): r
+            for r in rows if r.get("bench") == "fig6"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifact", default=ARTIFACT)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative wall-clock regression budget per scale")
+    ap.add_argument("--min-delta-s", type=float, default=0.5,
+                    help="ignore regressions smaller than this in absolute "
+                         "seconds (timer noise on shared CI runners)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current artifact")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.artifact):
+        print(f"missing benchmark artifact: {args.artifact} "
+              f"(run benchmarks.fig6_scalability first)")
+        return 1
+    cur = _rows(args.artifact)
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        keep = [{k: r[k] for k in
+                 ("bench", "dataset", "scale", "V", "E", "T", "wall_s")}
+                for r in cur.values()]
+        with open(args.baseline, "w") as f:
+            json.dump(keep, f, indent=1)
+        print(f"baseline updated: {args.baseline} ({len(keep)} scales)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"missing baseline: {args.baseline} "
+              f"(seed it with --update)")
+        return 1
+    base = _rows(args.baseline)
+    failures, checked = [], 0
+    for key, b in sorted(base.items()):
+        c = cur.get(key)
+        if c is None:
+            print(f"warn: baseline scale {key} not in current artifact; "
+                  f"skipped")
+            continue
+        checked += 1
+        ratio = c["wall_s"] / max(b["wall_s"], 1e-9)
+        delta = c["wall_s"] - b["wall_s"]
+        verdict = "ok"
+        if ratio > 1.0 + args.tolerance and delta > args.min_delta_s:
+            verdict = "REGRESSION"
+            failures.append(key)
+        print(f"{key[0]} @ scale {key[1]}: {b['wall_s']:.3f}s -> "
+              f"{c['wall_s']:.3f}s ({ratio:.2f}x) {verdict}")
+    if not checked:
+        print("no overlapping (dataset, scale) rows between baseline and "
+              "artifact")
+        return 1
+    if failures:
+        print(f"\n{len(failures)} scale(s) regressed beyond "
+              f"{args.tolerance:.0%} (+{args.min_delta_s}s floor)")
+        return 1
+    print(f"\nbench gate ok: {checked} scale(s) within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
