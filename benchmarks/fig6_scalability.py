@@ -16,6 +16,12 @@ separately per file: cold streaming ingest (text → CSR cache, forced
 re-parse), warm cache load (mmap, 0 bytes parsed), and the summarize
 itself — so ingest scaling is visible next to Thm. 3.4's merge-loop
 scaling instead of being folded into one number (DESIGN.md §10).
+
+``--distributed --edge-list`` combines them: each file's CSR cache is fed
+straight onto the mesh (``repro.graphs.feed.shard_edges_from_cache``,
+DESIGN.md §11) and the edge-sharded pipeline runs out-of-core — the feed,
+merge-loop, and sparsify-tail times are reported per file along with the
+feed's staging accounting (host staging = one shard, never |E|).
 """
 
 from __future__ import annotations
@@ -75,23 +81,38 @@ def run_distributed(dataset="amazon0601", scales=(0.01, 0.02), T=5, seed=0,
         run_distributed as run_dist_pipeline,
     )
 
+    from repro.graphs.feed import ShardFeeder, shard_edges
+
     mesh = make_host_mesh((devices,), ("data",))
     rows = []
+    # one feeder shared across scales — it allocates a fresh buffer per
+    # shard (in-place reuse would corrupt earlier feeds under PJRT CPU
+    # zero-copy adoption; see feed.ShardFeeder) and accumulates the
+    # sweep-wide staging high-water mark
+    feeder = ShardFeeder()
     for sc in scales:
         src, dst, v = generate(dataset, seed=seed, scale=sc)
         cfg = SummaryConfig(T=T, k_frac=k_frac, seed=seed)
         graph, _ = make_graph(src, dst, v)
-        # one jitted pipeline per size, reused so the timed run hits the
-        # jit cache (fresh closures would retrace + recompile every call)
-        pipe = build_distributed_pipeline(mesh, cfg, v, graph.num_edges)
-        run_dist_pipeline(src, dst, v, cfg, mesh, pipeline=pipe)  # warm-up
+        # one feed + one jitted pipeline per size, both reused so the
+        # timed run hits the jit cache (fresh closures would retrace +
+        # recompile every call) and isn't charged for the host→device feed
         t0 = time.perf_counter()
-        _state, stats, size_g = run_dist_pipeline(src, dst, v, cfg, mesh,
-                                                  pipeline=pipe)
+        shards = shard_edges(np.asarray(graph.src), np.asarray(graph.dst),
+                             mesh, feeder=feeder)
+        t_feed = time.perf_counter() - t0
+        pipe = build_distributed_pipeline(mesh, cfg, v, graph.num_edges)
+        run_dist_pipeline(None, None, v, cfg, mesh, pipeline=pipe,
+                          shards=shards)  # warm-up
+        t0 = time.perf_counter()
+        _state, stats, size_g = run_dist_pipeline(None, None, v, cfg, mesh,
+                                                  pipeline=pipe,
+                                                  shards=shards)
         dt = time.perf_counter() - t0
         r = {"bench": "fig6_distributed", "dataset": dataset, "scale": sc,
              "V": v, "E": len(src), "T": T, "devices": devices,
-             "wall_s": dt, "sparsify_wall_s": stats["sparsify_wall_s"],
+             "wall_s": dt, "feed_wall_s": t_feed,
+             "sparsify_wall_s": stats["sparsify_wall_s"],
              "rel_size": stats["size_bits"] / size_g, "re1": stats["re1"],
              "superedges_dropped": stats["dropped"]}
         rows.append(r)
@@ -138,6 +159,60 @@ def run_edge_list(paths, T=5, seed=0, k_frac=0.3,
     return rows
 
 
+def run_distributed_edge_list(paths, T=5, seed=0, k_frac=0.3,
+                              chunk_edges=None, devices=8) -> list[dict]:
+    """Out-of-core per file: CSR cache → per-shard feed → edge-sharded run.
+
+    The cache's mmap'd columns go straight onto the mesh
+    (``shard_edges_from_cache``, DESIGN.md §11) — the full edge list is
+    never materialized on the host, and the row records the feed's staging
+    high-water mark next to its wall time so the memory story is auditable
+    alongside the scaling one.
+    """
+    from repro.core import SummaryConfig
+    from repro.graphs import load_graph
+    from repro.graphs.feed import ShardFeeder, shard_edges_from_cache
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.summarize import (
+        build_distributed_pipeline,
+        run_distributed as run_dist_pipeline,
+    )
+
+    mesh = make_host_mesh((devices,), ("data",))
+    feeder = ShardFeeder()
+    rows = []
+    for path in paths:
+        g = load_graph(path, chunk_edges=chunk_edges)  # ingest iff no cache
+        assert g.cache_dir is not None, f"{path}: no CSR cache to feed from"
+        v, e, cache_dir = g.num_nodes, g.num_edges, g.cache_dir
+        del g  # drop the mmap handles; the feed reopens its own
+        t0 = time.perf_counter()
+        shards = shard_edges_from_cache(cache_dir, mesh, feeder=feeder)
+        t_feed = time.perf_counter() - t0
+        cfg = SummaryConfig(T=T, k_frac=k_frac, seed=seed)
+        pipe = build_distributed_pipeline(mesh, cfg, v, e)
+        run_dist_pipeline(None, None, v, cfg, mesh, pipeline=pipe,
+                          shards=shards)  # warm-up
+        t0 = time.perf_counter()
+        _state, stats, size_g = run_dist_pipeline(None, None, v, cfg, mesh,
+                                                  pipeline=pipe,
+                                                  shards=shards)
+        dt = time.perf_counter() - t0
+        fs = shards.stats
+        r = {"bench": "fig6_dist_edge_list", "path": path, "V": v, "E": e,
+             "T": T, "devices": devices, "wall_s": dt, "feed_wall_s": t_feed,
+             "sparsify_wall_s": stats["sparsify_wall_s"],
+             "feed_path": fs.path, "feed_shard_rows": fs.shard_rows,
+             "feed_peak_staging_bytes": fs.peak_staging_bytes,
+             "feed_bytes_copied": fs.bytes_copied,
+             "rel_size": stats["size_bits"] / size_g, "re1": stats["re1"],
+             "superedges_dropped": stats["dropped"]}
+        rows.append(r)
+        emit(r)
+    save_artifact("fig6_dist_edge_list", rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dataset", default="amazon0601")
@@ -153,15 +228,20 @@ def main() -> None:
                     help="time ingest/load/summarize per SNAP file")
     ap.add_argument("--chunk-edges", type=int, default=None)
     args = ap.parse_args()
-    if args.edge_list:
-        run_edge_list(args.edge_list, T=args.T, seed=args.seed,
-                      chunk_edges=args.chunk_edges)
-    elif args.distributed:
+    if args.distributed:
         # must precede the first jax backend init (device count is locked
         # then); harmless if the user already exported their own flags
         os.environ.setdefault(
             "XLA_FLAGS",
             f"--xla_force_host_platform_device_count={args.devices}")
+    if args.edge_list and args.distributed:
+        run_distributed_edge_list(args.edge_list, T=args.T, seed=args.seed,
+                                  chunk_edges=args.chunk_edges,
+                                  devices=args.devices)
+    elif args.edge_list:
+        run_edge_list(args.edge_list, T=args.T, seed=args.seed,
+                      chunk_edges=args.chunk_edges)
+    elif args.distributed:
         run_distributed(args.dataset, tuple(args.scales), args.T, args.seed,
                         devices=args.devices)
     else:

@@ -24,10 +24,10 @@ from repro.core import SummaryConfig
 from repro.core.distributed import (
     make_distributed_sparsify,
     make_distributed_step_compact,
-    pad_and_shard_edges,
 )
 from repro.core.types import init_state, make_graph
 from repro.graphs import generate
+from repro.graphs.feed import shard_edges
 from repro.launch.mesh import make_host_mesh
 
 
@@ -46,9 +46,13 @@ def main():
     step = make_distributed_step_compact(mesh, cfg, v, e,
                                          capacity_factor=32.0,
                                          lean_sort=True)
-    src_p, dst_p = pad_and_shard_edges(np.asarray(graph.src),
-                                       np.asarray(graph.dst), mesh)
-    print(f"edge shard per device: {src_p.shape[0] // 8} edges")
+    # per-shard feed (DESIGN.md §11): shards are born on their devices;
+    # real graphs would come off the mmap'd CSR cache the same way via
+    # shard_edges_from_cache(cache_dir, mesh) — zero host densify
+    shards = shard_edges(np.asarray(graph.src), np.asarray(graph.dst), mesh)
+    src_p, dst_p = shards.src, shards.dst
+    print(f"edge shard per device: {shards.stats.shard_rows} edges "
+          f"(host staging {shards.stats.peak_staging_bytes} B — one shard)")
 
     state = init_state(v, cfg.seed)
     k_bits = cfg.target_bits(size_g)

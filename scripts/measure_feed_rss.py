@@ -1,0 +1,151 @@
+"""Measure the host-RSS cost of getting an edge list onto the mesh.
+
+Compares, in separate child processes (fresh jax runtimes, same fixture):
+
+  * ``densify`` — the pre-feed data path: densify the mmap'd cache
+    columns through ``make_graph`` (int64 canonicalization) and build
+    full-length padded host copies, the way ``pad_and_shard_edges``
+    worked before `repro.graphs.feed`;
+  * ``feed``    — the out-of-core path: ``shard_edges_from_cache`` slices
+    the mmap straight into per-device shards (host staging = one shard).
+
+Each child reports two deltas over the data path: **resident** growth
+(current RSS after − before, the steady-state cost of what the path
+leaves allocated) and **peak** growth (ru_maxrss after − before, the
+transient sort/unique scratch — visible once it exceeds the jax-init
+high-water mark). The parent writes ``artifacts/memory/feed_rss.json``
+(the EXPERIMENTS.md §Memory numbers; uploaded by the CI ``ingest`` job)
+and prints a table.
+
+Run:  PYTHONPATH=src python scripts/measure_feed_rss.py data/rmat_1m.txt.gz
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+
+def _current_rss_mb() -> float:
+    """RSS *right now* (not the lifetime peak): the baseline must not
+    already contain the jax-init high-water mark, or any data-path cost
+    below that mark measures as zero. Linux-only (/proc); falls back to
+    the peak elsewhere (deltas then read as lower bounds)."""
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE") \
+                / (1 << 20)
+    except (OSError, ValueError, IndexError):
+        from repro.launch.summarize import peak_rss_mb
+
+        return peak_rss_mb() or 0.0
+
+
+def child(mode: str, path: str, devices: int) -> None:
+    import jax
+    import numpy as np
+
+    from repro.graphs import load_graph
+    from repro.launch.mesh import make_host_mesh
+
+    from repro.launch.summarize import peak_rss_mb
+
+    assert jax.device_count() == devices
+    mesh = make_host_mesh((devices,), ("data",))
+    g = load_graph(path)
+    assert g.cache_dir is not None, f"{path}: no CSR cache"
+    rec = {"mode": mode, "V": g.num_nodes, "E": g.num_edges,
+           "devices": devices, "baseline_mb": _current_rss_mb(),
+           "baseline_peak_mb": peak_rss_mb()}
+
+    if mode == "densify":
+        # the historical path: canonicalize on host, build full padded
+        # copies, commit to the default device and let jit reshard
+        import jax.numpy as jnp
+
+        from repro.core.types import make_graph
+
+        graph, _ = make_graph(np.asarray(g.src), np.asarray(g.dst),
+                              g.num_nodes)
+        e = graph.num_edges
+        pad = (-e) % devices
+        src_p = np.concatenate([np.asarray(graph.src, np.int32),
+                                np.full(pad, -1, np.int32)])
+        dst_p = np.concatenate([np.asarray(graph.dst, np.int32),
+                                np.full(pad, -1, np.int32)])
+        src_g, dst_g = jnp.asarray(src_p), jnp.asarray(dst_p)
+    else:
+        from repro.graphs.feed import shard_edges_from_cache
+
+        shards = shard_edges_from_cache(g.cache_dir, mesh)
+        src_g, dst_g = shards.src, shards.dst
+        rec["feed"] = shards.stats.asdict()
+
+    src_g.block_until_ready(), dst_g.block_until_ready()
+    # two deltas, two regimes: resident growth (current − current) is the
+    # steady-state cost of the arrays the path leaves behind, and survives
+    # even when everything stays below the jax-init transient high-water
+    # mark; peak growth (ru_maxrss − ru_maxrss) is the transient scratch
+    # (sort/unique) and is only visible once it exceeds that mark
+    rec["after_mb"] = _current_rss_mb()
+    rec["peak_mb"] = peak_rss_mb()
+    rec["delta_resident_mb"] = rec["after_mb"] - rec["baseline_mb"]
+    rec["delta_peak_mb"] = max(
+        (rec["peak_mb"] or 0.0) - (rec["baseline_peak_mb"] or 0.0), 0.0)
+    print(json.dumps(rec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="SNAP edge-list file (cache built on "
+                                 "first use)")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--child", choices=("densify", "feed"), default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--out", default="artifacts/memory/feed_rss.json")
+    args = ap.parse_args()
+    if args.child:
+        child(args.child, args.path, args.devices)
+        return
+
+    # warm the cache once so neither child pays for ingestion
+    from repro.graphs import load_graph
+
+    load_graph(args.path)
+
+    rows = []
+    for mode in ("densify", "feed"):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), args.path,
+             "--devices", str(args.devices), "--child", mode],
+            capture_output=True, text=True, env=env, check=True)
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    dens, feed = rows
+    print(f"|E| = {dens['E']:,}  devices = {dens['devices']}")
+    for r in rows:
+        print(f"  {r['mode']:8s} resident {r['baseline_mb']:7.1f} → "
+              f"{r['after_mb']:7.1f} MB (Δ {r['delta_resident_mb']:+7.1f}), "
+              f"peak Δ {r['delta_peak_mb']:+7.1f} MB")
+    f = feed.get("feed", {})
+    if f:
+        print(f"  feed staging high-water: {f['peak_staging_bytes']:,} B "
+              f"(= one shard of {f['shard_rows']:,} rows; "
+              f"full |E| column would be {4 * dens['E']:,} B)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,13 @@ their *lo* owner only (each pair counted exactly once), the ξ-th smallest
 :func:`repro.core.sparsify.radix_select_kth` instead of a replicated sort,
 and the resulting drop mask stays sharded — the whole pipeline
 (merge → sparsify → metrics) runs without gathering edges to one host.
+
+Edge shards themselves arrive through :mod:`repro.graphs.feed`
+(DESIGN.md §11): real graphs are sliced straight out of the mmap'd binary
+CSR cache into per-device shards (host staging = one shard, never a
+full-|E| array), so the steps here — both the simple hash-owner and the
+compact group-owner path — receive inputs already committed to
+``MeshRules.edge_spec`` and nothing upstream densifies the edge list.
 """
 
 from __future__ import annotations
@@ -130,7 +137,11 @@ def make_distributed_step(mesh, cfg: SummaryConfig, num_nodes: int,
 
     def step(src_l, dst_l, state: SummaryState, theta, salt):
         e_loc = src_l.shape[0]
-        cap = int(e_loc * capacity_factor / n_dev) + 8
+        # a destination can never receive more records than the sender
+        # has valid pairs (≤ e_loc), so capacity beyond e_loc is pure
+        # bucket memory waste — at web/CI scale the uncapped factor
+        # allocated multi-GB buckets for provably-empty slots
+        cap = min(int(e_loc * capacity_factor / n_dev), e_loc) + 8
         plo, phi, cnt, valid = _local_pairs(src_l, dst_l, state.node2super, v)
         own_lo = rules.owner(plo, salt)
         own_hi = rules.owner(phi, salt)
@@ -269,7 +280,11 @@ def make_distributed_sparsify(mesh, cfg: SummaryConfig, num_nodes: int,
 
     def run(src_l, dst_l, state: SummaryState, k_bits, salt):
         e_loc = src_l.shape[0]
-        cap = int(e_loc * capacity_factor / n_dev) + 8
+        # a destination can never receive more records than the sender
+        # has valid pairs (≤ e_loc), so capacity beyond e_loc is pure
+        # bucket memory waste — at web/CI scale the uncapped factor
+        # allocated multi-GB buckets for provably-empty slots
+        cap = min(int(e_loc * capacity_factor / n_dev), e_loc) + 8
         dev = jax.lax.axis_index(axis_names)
 
         # ---- pair exchange: each pair to its lo owner, counted once ------
@@ -358,13 +373,20 @@ def make_distributed_sparsify(mesh, cfg: SummaryConfig, num_nodes: int,
 
 
 def pad_and_shard_edges(src, dst, mesh) -> tuple[jax.Array, jax.Array]:
-    """Pad the edge list to a multiple of the device count (-1 padding)."""
-    n_dev = int(np.prod(list(mesh.shape.values())))
-    e = len(src)
-    pad = (-e) % n_dev
-    src_p = np.concatenate([np.asarray(src, np.int32), np.full(pad, -1, np.int32)])
-    dst_p = np.concatenate([np.asarray(dst, np.int32), np.full(pad, -1, np.int32)])
-    return jnp.asarray(src_p), jnp.asarray(dst_p)
+    """Pad the edge list to a multiple of the device count (-1 padding).
+
+    Compatibility shim over :func:`repro.graphs.feed.shard_edges` — the
+    returned arrays are now *born sharded* per ``MeshRules.edge_spec``
+    (identical contents to the historical full-host construction, but no
+    full-|E| concatenate copy; DESIGN.md §11). Callers holding a CSR
+    cache should feed it directly via
+    :func:`repro.graphs.feed.shard_edges_from_cache` instead of
+    densifying the mmap'd columns just to pass them here.
+    """
+    from repro.graphs.feed import shard_edges
+
+    shards = shard_edges(src, dst, mesh)
+    return shards.src, shards.dst
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +455,11 @@ def make_distributed_step_compact(mesh, cfg: SummaryConfig, num_nodes: int,
              groups_in=None):
         del salt  # ownership re-randomizes through the shingle rng
         e_loc = src_l.shape[0]
-        cap = int(e_loc * capacity_factor / n_dev) + 8
+        # a destination can never receive more records than the sender
+        # has valid pairs (≤ e_loc), so capacity beyond e_loc is pure
+        # bucket memory waste — at web/CI scale the uncapped factor
+        # allocated multi-GB buckets for provably-empty slots
+        cap = min(int(e_loc * capacity_factor / n_dev), e_loc) + 8
         dev = jax.lax.axis_index(axis_names)
 
         # ---- identical-everywhere candidate groups ----------------------

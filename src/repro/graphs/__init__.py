@@ -7,3 +7,21 @@ from repro.graphs.io import (  # noqa: F401
     open_csr,
     write_edge_list,
 )
+
+# repro.graphs.feed imports jax (via repro.dist); the ingest layer above is
+# numpy-only and must stay importable without it (fixture writers, parse
+# tooling), so the feed names re-export lazily (PEP 562).
+_FEED_NAMES = ("EdgeShards", "FeedStats", "ShardFeeder", "shard_edges",
+               "shard_edges_from_cache", "shard_layout")
+
+
+def __getattr__(name):
+    if name in _FEED_NAMES:
+        from repro.graphs import feed
+
+        return getattr(feed, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_FEED_NAMES))

@@ -22,6 +22,11 @@ otherwise express); ids outside the header range fall back to relabeling.
 
 Dataset resolution order (``load_graph``): real file under
 ``$SSUMM_DATA_DIR`` → binary cache → synthetic stand-in (``generate``).
+
+Downstream, the cache is the hand-off point of the out-of-core data path:
+:mod:`repro.graphs.feed` slices the mmap'd ``src``/``dst`` members into
+per-device shards without re-densifying — DESIGN.md §11 walks the whole
+file → spill → cache → feed → shard_map pipeline with its memory model.
 """
 
 from __future__ import annotations
@@ -44,6 +49,10 @@ CHUNK_EDGES_ENV = "SSUMM_CHUNK_EDGES"
 
 CACHE_SUFFIX = ".ssummcache"
 CACHE_VERSION = 1
+# every member a fresh cache must carry; a cache that lost one (e.g. a
+# mid-write crash between the staging swap and a later manual cleanup)
+# is treated as absent and re-ingested rather than raising downstream
+CACHE_MEMBERS = ("src.npy", "dst.npy", "indptr.npy", "indices.npy")
 DEFAULT_CHUNK_EDGES = 1 << 20
 _EXTS = (".txt", ".txt.gz", ".csv", ".csv.gz", ".el", ".el.gz")
 # raw ids pack two-per-*signed*-int64 during the merge and land in int32
@@ -410,6 +419,10 @@ def ingest_edge_list(path: str, cache_dir: str | None = None,
 
 
 def cache_is_fresh(cache_dir: str, source_path: str | None = None) -> bool:
+    """A cache is fresh iff meta.json parses, matches the source stamp,
+    and **all four** ``.npy`` members exist — a directory that lost a
+    member (mid-write crash, partial deletion) must fall through to
+    re-ingestion instead of raising at ``np.load`` time."""
     meta_path = os.path.join(cache_dir, "meta.json")
     if not os.path.exists(meta_path):
         return False
@@ -419,6 +432,9 @@ def cache_is_fresh(cache_dir: str, source_path: str | None = None) -> bool:
     except (OSError, ValueError):
         return False
     if meta.get("version") != CACHE_VERSION:
+        return False
+    if any(not os.path.exists(os.path.join(cache_dir, m))
+           for m in CACHE_MEMBERS):
         return False
     if source_path is not None and os.path.exists(source_path):
         if meta.get("source") != _file_stamp(source_path):

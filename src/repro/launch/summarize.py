@@ -13,6 +13,13 @@ local device with the edge-sharded shard_map path (``--distributed``),
 and prints Eq.(2)/(4) metrics. Registry names resolve real files under
 ``$SSUMM_DATA_DIR`` first, then the binary cache, then the synthetic
 stand-in — the JSON's ``source`` field says which one ran.
+
+Distributed runs with a CSR cache behind them feed the mmap'd edge
+columns straight onto the mesh (``repro.graphs.feed``, DESIGN.md §11):
+host staging is one shard, never a full-|E| array, and the JSON reports
+the feed accounting (``feed_*``) plus ``peak_rss_mb``; ``--rss-budget-mb``
+turns the RSS number into a hard exit-status gate (the CI ``ingest`` job
+runs the 1.1M-edge fixture under it).
 """
 
 from __future__ import annotations
@@ -29,10 +36,10 @@ from repro.core import SummaryConfig, summarize
 from repro.core.distributed import (
     make_distributed_sparsify,
     make_distributed_step_compact,
-    pad_and_shard_edges,
 )
 from repro.core.types import init_state, make_graph
 from repro.graphs import DATASETS, load_graph
+from repro.graphs.feed import EdgeShards, shard_edges, shard_edges_from_cache
 from repro.runtime import make_mesh_from_plan, plan_mesh
 
 
@@ -54,18 +61,35 @@ def build_distributed_pipeline(mesh, cfg: SummaryConfig, num_nodes: int,
     return step, sparsify_step
 
 
-def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None):
+def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
+                    shards: EdgeShards | None = None):
     """Merge rounds + final sparsification, all edge-sharded over ``mesh``.
 
     Eq.(2)/(4) metrics come out of the psum'd reductions of the sparsify
     step — at no point is the edge list (or the pair table) gathered to a
     single host. Returns ``(state, stats, size_g)`` with ``stats`` holding
     the post-sparsification metrics plus ``sparsify_wall_s``.
+
+    ``shards`` (an :class:`repro.graphs.feed.EdgeShards`) supplies the
+    already-sharded edge columns — the out-of-core path
+    (``shard_edges_from_cache``) or a benchmark reusing one feed across
+    rounds. ``src``/``dst`` are then ignored (pass ``None``). Without it,
+    the edge list is canonicalized and fed through the in-memory fallback;
+    both paths produce bit-identical metrics (``tests/feed_check.py``).
     """
-    graph, _ = make_graph(src, dst, v)
-    e = graph.num_edges
-    src_p, dst_p = pad_and_shard_edges(np.asarray(graph.src),
-                                       np.asarray(graph.dst), mesh)
+    if shards is None:
+        graph, _ = make_graph(src, dst, v)
+        shards = shard_edges(np.asarray(graph.src), np.asarray(graph.dst),
+                             mesh)
+    elif shards.num_nodes is not None and shards.num_nodes != v:
+        # a stale v with cache-fed shards would let edge ids index out of
+        # the [v]-sized partition vectors, which jit clamps silently —
+        # plausible-but-wrong metrics instead of an error
+        raise ValueError(
+            f"shards came from a cache with |V|={shards.num_nodes} but "
+            f"run_distributed was called with v={v}")
+    e = shards.num_edges
+    src_p, dst_p = shards.src, shards.dst
     if pipeline is None:
         pipeline = build_distributed_pipeline(mesh, cfg, v, e)
     step, sparsify_step = pipeline
@@ -95,6 +119,19 @@ def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None):
     return state, out, size_g
 
 
+def peak_rss_mb() -> float | None:
+    """Process high-water RSS in MB (``None`` where unsupported)."""
+    try:
+        import resource
+        import sys
+
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # ru_maxrss is KB on linux, bytes on darwin
+        return rss / (1 << 20) if sys.platform == "darwin" else rss / 1024.0
+    except (ImportError, ValueError):
+        return None
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dataset", default="dblp", choices=sorted(DATASETS))
@@ -112,6 +149,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--group-size", type=int, default=32)
     ap.add_argument("--distributed", action="store_true",
                     help="edge-sharded shard_map over all local devices")
+    ap.add_argument("--rss-budget-mb", type=float, default=None,
+                    help="fail (exit 1) if the process peak RSS exceeds "
+                         "this many MB — the CI out-of-core gate")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -135,7 +175,20 @@ def main(argv=None) -> dict:
     if args.distributed:
         plan = plan_mesh(jax.device_count(), global_batch=1, want_model=1)
         mesh = make_mesh_from_plan(plan)
-        _state, stats, size_g = run_distributed(src, dst, v, cfg, mesh)
+        # out-of-core feed: a graph backed by a CSR cache goes straight
+        # from the mmap'd columns to per-device shards (DESIGN.md §11);
+        # only synthetic stand-ins take the in-memory fallback
+        t_feed = time.time()
+        if g.cache_dir is not None:
+            shards = shard_edges_from_cache(g.cache_dir, mesh)
+        else:
+            graph, _ = make_graph(src, dst, v)
+            shards = shard_edges(np.asarray(graph.src),
+                                 np.asarray(graph.dst), mesh)
+        feed_wall_s = time.time() - t_feed
+        _state, stats, size_g = run_distributed(None, None, v, cfg, mesh,
+                                                shards=shards)
+        fs = shards.stats
         result = {
             "dataset": args.edge_list or args.dataset, "V": v, "E": len(src),
             "mode": f"distributed{dict(mesh.shape)}",
@@ -147,6 +200,12 @@ def main(argv=None) -> dict:
             "num_superedges": stats["num_superedges"],
             "superedges_dropped": stats["dropped"],
             "sparsify_wall_s": stats["sparsify_wall_s"],
+            "feed_wall_s": feed_wall_s,
+            "feed_path": fs.path,
+            "feed_shard_rows": fs.shard_rows,
+            "feed_shard_bytes": fs.shard_bytes,
+            "feed_peak_staging_bytes": fs.peak_staging_bytes,
+            "feed_bytes_copied": fs.bytes_copied,
             "wall_s": time.time() - t0,
         }
     else:
@@ -163,7 +222,13 @@ def main(argv=None) -> dict:
             "wall_s": time.time() - t0,
         }
     result.update(ingest)
+    result["peak_rss_mb"] = peak_rss_mb()
     print(json.dumps(result, indent=1))
+    if (args.rss_budget_mb is not None and result["peak_rss_mb"] is not None
+            and result["peak_rss_mb"] > args.rss_budget_mb):
+        raise SystemExit(
+            f"peak RSS {result['peak_rss_mb']:.1f} MB exceeds the "
+            f"--rss-budget-mb {args.rss_budget_mb:.1f} MB gate")
     return result
 
 

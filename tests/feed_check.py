@@ -1,0 +1,128 @@
+"""Subprocess body for out-of-core feed tests (needs its own jax init with
+fake devices — run via tests/test_distributed.py, never imported by pytest).
+
+Checks, on an 8-device host mesh (DESIGN.md §11):
+  1. equivalence: `shard_edges_from_cache` → `run_distributed` produces
+     merge/sparsify metrics **bit-identical** to the in-memory
+     `pad_and_shard_edges` path (and to the historical replicated-array
+     construction that let jit reshard) — on a graph whose |E| is *not*
+     divisible by the device count;
+  2. shard boundaries: with |E| < n_dev the trailing shards are pure
+     ``-1`` padding, per-device contents match the exact mmap slices, and
+     the all-padding shards flow through a full merge round + metric
+     parity with the single-device closed forms;
+  3. staging accounting: the feed's host high-water mark is one shard,
+     never 4·|E|.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SummaryConfig, costs
+from repro.core.distributed import make_distributed_step, pad_and_shard_edges
+from repro.core.types import init_state, make_graph
+from repro.graphs import generate, load_graph, write_edge_list
+from repro.graphs.feed import ShardFeeder, shard_edges, shard_edges_from_cache
+from repro.launch.mesh import make_host_mesh
+from repro.launch.summarize import run_distributed
+
+
+def stats_equal(a: dict, b: dict, label: str) -> None:
+    assert set(a) == set(b), (label, set(a) ^ set(b))
+    for k in a:
+        if k.endswith("wall_s"):
+            continue
+        assert a[k] == b[k], (label, k, a[k], b[k])
+
+
+def shard_contents(arr) -> list[np.ndarray]:
+    """Per-shard data ordered by global row position (not device id)."""
+    shards = sorted(arr.addressable_shards,
+                    key=lambda s: s.index[0].start or 0)
+    return [np.asarray(s.data) for s in shards]
+
+
+def main():
+    assert jax.device_count() == 8
+    mesh = make_host_mesh((2, 4), ("data", "model"))
+    cfg = SummaryConfig(T=4, k_frac=0.35, use_pallas=False)
+
+    # ---- 1. cache feed ≡ in-memory feed ≡ legacy construction ----------
+    src, dst, v = generate("ego-facebook", seed=0, scale=0.05)
+    graph, _ = make_graph(src, dst, v)
+    csrc = np.asarray(graph.src, np.int32)
+    cdst = np.asarray(graph.dst, np.int32)
+    if csrc.size % 8 == 0:  # force the |E| % n_dev != 0 regime
+        csrc, cdst = csrc[:-1], cdst[:-1]
+    e = csrc.size
+    assert e % 8 != 0
+
+    workdir = tempfile.mkdtemp(prefix="ssumm-feedcheck-")
+    path = write_edge_list(os.path.join(workdir, "g.txt"), csrc, cdst, v)
+    g = load_graph(path)
+    assert g.num_edges == e and g.num_nodes == v
+
+    feeder = ShardFeeder()
+    sh_cache = shard_edges_from_cache(g.cache_dir, mesh, feeder=feeder)
+    assert sh_cache.stats.peak_staging_bytes == sh_cache.stats.shard_bytes
+    assert sh_cache.stats.peak_staging_bytes < 4 * e, "staged ~full |E|"
+    sh_mem = shard_edges(csrc, cdst, mesh, feeder=feeder)
+    for a, b in zip(shard_contents(sh_cache.src), shard_contents(sh_mem.src)):
+        assert np.array_equal(a, b)
+    legacy = pad_and_shard_edges(csrc, cdst, mesh)
+    assert np.array_equal(np.asarray(sh_cache.src), np.asarray(legacy[0]))
+    assert np.array_equal(np.asarray(sh_cache.dst), np.asarray(legacy[1]))
+
+    state_c, stats_c, size_g = run_distributed(None, None, v, cfg, mesh,
+                                               shards=sh_cache)
+    state_m, stats_m, _ = run_distributed(csrc, cdst, v, cfg, mesh)
+    stats_equal(stats_c, stats_m, "cache vs in-memory metrics")
+    assert np.array_equal(np.asarray(state_c.node2super),
+                          np.asarray(state_m.node2super))
+    assert np.array_equal(np.asarray(state_c.size), np.asarray(state_m.size))
+    assert stats_c["dropped"] > 0, "sparsify tail never dropped"
+
+    # ---- 2. shard boundaries: |E| < n_dev, empty trailing shards -------
+    tsrc = np.array([0, 0, 1, 2, 3], np.int32)
+    tdst = np.array([1, 2, 2, 3, 4], np.int32)
+    tv = 5
+    tpath = write_edge_list(os.path.join(workdir, "tiny.txt"), tsrc, tdst, tv)
+    tg = load_graph(tpath)
+    sh = shard_edges_from_cache(tg.cache_dir, mesh, feeder=feeder)
+    assert sh.stats.shard_rows == 1 and sh.stats.padded_edges == 8
+    got = shard_contents(sh.src)
+    want = [np.array([x], np.int32) for x in tsrc] + [
+        np.array([-1], np.int32)] * 3
+    for a, b in zip(got, want):
+        assert np.array_equal(a, b), (got, want)
+    # all-padding shards must survive a real step: metric parity with the
+    # single-device closed forms when merges are disabled
+    step = make_distributed_step(mesh, cfg, tv, int(tsrc.size),
+                                 capacity_factor=64.0)
+    state = init_state(tv, 0)
+    with mesh:
+        _, st = step(sh.src, sh.dst, state, jnp.float32(1e9), jnp.uint32(1))
+    pt = costs.build_pair_table(jnp.asarray(tsrc), jnp.asarray(tdst), state)
+    m = costs.summary_metrics(pt, state, tv, int(tsrc.size),
+                              cbar_mode=cfg.cbar_mode, re_guard=cfg.re_guard)
+    np.testing.assert_allclose(float(st["size_bits"]), float(m["size_bits"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(st["re1"]), float(m["re1"]), rtol=1e-5)
+
+    print(json.dumps({"ok": True, "E": int(e),
+                      "dropped": float(stats_c["dropped"]),
+                      "peak_staging_bytes":
+                          int(sh_cache.stats.peak_staging_bytes),
+                      "shard_bytes": int(sh_cache.stats.shard_bytes)}))
+
+
+if __name__ == "__main__":
+    main()

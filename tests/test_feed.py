@@ -1,0 +1,140 @@
+"""Out-of-core shard feeding (`repro.graphs.feed`, DESIGN.md §11):
+layout math, padding, cache↔memory content identity, staging accounting,
+and the corrupted-cache guard — all on the in-process single-device mesh
+(multi-device equivalence runs in tests/feed_check.py)."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.graphs import generate, load_graph, write_edge_list
+from repro.graphs.feed import (
+    ShardFeeder,
+    shard_edges,
+    shard_edges_from_cache,
+    shard_layout,
+)
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh((1,), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# layout math (shared by both feed paths and the legacy shim)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("e,n,want", [
+    (0, 1, (0, 0)),
+    (0, 8, (0, 0)),          # empty graph: zero-row shards
+    (5, 8, (1, 8)),          # |E| < n_dev: three all-padding shards
+    (8, 8, (1, 8)),
+    (16, 8, (2, 16)),
+    (17, 8, (3, 24)),        # |E| % n_dev != 0: part-padding last shard
+    (1_000_003, 8, (125_001, 1_000_008)),
+])
+def test_shard_layout(e, n, want):
+    assert shard_layout(e, n) == want
+    rows, padded = shard_layout(e, n)
+    # invariants the shard_map path depends on
+    assert padded % n == 0 and padded - e < n and rows * n == padded
+
+
+def test_shard_layout_rejects_bad_device_count():
+    with pytest.raises(ValueError):
+        shard_layout(10, 0)
+
+
+# ---------------------------------------------------------------------------
+# in-memory fallback: content identity with the historical padding
+# ---------------------------------------------------------------------------
+
+
+def test_shard_edges_matches_padded_edge_list(mesh):
+    src, dst, v = generate("caida", scale=0.02)
+    sh = shard_edges(src, dst, mesh)
+    assert sh.num_edges == len(src) and sh.num_nodes is None
+    assert np.array_equal(np.asarray(sh.src), np.asarray(src, np.int32))
+    assert np.array_equal(np.asarray(sh.dst), np.asarray(dst, np.int32))
+    assert sh.stats.path == "memory"
+
+
+def test_shard_edges_rejects_ragged_columns(mesh):
+    with pytest.raises(ValueError, match="equal-length"):
+        shard_edges(np.arange(4), np.arange(5), mesh)
+
+
+def test_feeder_buffer_is_not_aliased_across_feeds(mesh):
+    """PJRT's CPU client adopts aligned host buffers zero-copy, so a feeder
+    that reused one staging buffer in place would corrupt earlier feeds'
+    device arrays (observed: a second feed overwrote the first's shards).
+    Later feeds through a shared feeder must leave earlier results intact.
+
+    The shards must sit *above* the CPU client's zero-copy adoption
+    threshold (small buffers are always copied, which would make this
+    test vacuous) — 2^17 int32 elements is comfortably adopted."""
+    n = 1 << 17
+    feeder = ShardFeeder()
+    a = shard_edges(np.arange(n, dtype=np.int32),
+                    np.arange(n, dtype=np.int32) + 1, mesh, feeder=feeder)
+    b = shard_edges(np.full(n, 7, np.int32), np.full(n, 9, np.int32),
+                    mesh, feeder=feeder)
+    assert np.array_equal(np.asarray(a.src), np.arange(n, dtype=np.int32))
+    assert np.array_equal(np.asarray(a.dst),
+                          np.arange(n, dtype=np.int32) + 1)
+    assert np.array_equal(np.asarray(b.src), np.full(n, 7, np.int32))
+    # accounting: staging never exceeded the largest single shard
+    assert a.stats.peak_staging_bytes == a.stats.shard_bytes
+    assert feeder.peak_staging_bytes == a.stats.shard_bytes
+
+
+# ---------------------------------------------------------------------------
+# cache path: zero-densify identity with the in-memory path
+# ---------------------------------------------------------------------------
+
+
+def test_cache_feed_matches_memory_feed(tmp_path, mesh):
+    src, dst, v = generate("ego-facebook", scale=0.05)
+    p = write_edge_list(os.path.join(tmp_path, "g.txt"), src, dst, v,
+                        shuffle=True, seed=3)
+    g = load_graph(p)
+    sh_mem = shard_edges(src, dst, mesh)
+    sh_cache = shard_edges_from_cache(g.cache_dir, mesh)
+    assert sh_cache.stats.path == "cache-mmap"
+    assert sh_cache.num_nodes == v and sh_cache.num_edges == len(src)
+    assert np.array_equal(np.asarray(sh_cache.src), np.asarray(sh_mem.src))
+    assert np.array_equal(np.asarray(sh_cache.dst), np.asarray(sh_mem.dst))
+    # the staging high-water mark is one shard, not 4·|E|
+    assert sh_cache.stats.peak_staging_bytes == sh_cache.stats.shard_bytes
+
+
+def test_run_distributed_rejects_mismatched_v(tmp_path, mesh):
+    """Cache-fed shards carry |V| from meta.json; a stale caller-supplied
+    v must fail loudly, not silently clamp edge ids inside jit."""
+    from repro.core import SummaryConfig
+    from repro.launch.summarize import run_distributed
+
+    p = write_edge_list(os.path.join(tmp_path, "g.txt"),
+                        [0, 1, 2], [1, 2, 3], 4)
+    g = load_graph(p)
+    shards = shard_edges_from_cache(g.cache_dir, mesh)
+    with pytest.raises(ValueError, match=r"\|V\|=4"):
+        run_distributed(None, None, 7, SummaryConfig(T=1), mesh,
+                        shards=shards)
+
+
+def test_cache_feed_refuses_incomplete_cache(tmp_path, mesh):
+    p = write_edge_list(os.path.join(tmp_path, "g.txt"),
+                        [0, 1, 2], [1, 2, 3], 4)
+    g = load_graph(p)
+    os.remove(os.path.join(g.cache_dir, "dst.npy"))
+    with pytest.raises(FileNotFoundError, match="re-ingest"):
+        shard_edges_from_cache(g.cache_dir, mesh)
+    shutil.rmtree(g.cache_dir)
+    with pytest.raises(FileNotFoundError):
+        shard_edges_from_cache(g.cache_dir, mesh)

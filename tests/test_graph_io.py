@@ -23,7 +23,7 @@ from repro.graphs.io import (
     load_cache,
 )
 
-CACHE_FILES = ("src.npy", "dst.npy", "indptr.npy", "indices.npy")
+from repro.graphs.io import CACHE_MEMBERS as CACHE_FILES
 
 
 def _write(tmp_path, text, name="g.txt"):
@@ -152,6 +152,29 @@ def test_cache_hit_parses_zero_bytes_and_refresh_reparses(tmp_path):
     assert _edges(g1) == _edges(g2)
     g3 = load_graph(p, refresh=True)
     assert g3.source == "real" and g3.stats.bytes_parsed > 0
+
+
+def test_corrupted_cache_missing_member_reingests(tmp_path):
+    """meta.json intact but a ``.npy`` member lost (mid-write crash,
+    partial deletion): ``load_graph`` must fall through to re-ingestion
+    instead of raising at ``np.load`` time — for every member."""
+    from repro.graphs.io import cache_is_fresh
+
+    p = _write(tmp_path, "0 1\n1 2\n2 3\n")
+    for member in CACHE_FILES:
+        g = load_graph(p)
+        assert os.path.exists(os.path.join(g.cache_dir, "meta.json"))
+        os.remove(os.path.join(g.cache_dir, member))
+        assert not cache_is_fresh(g.cache_dir, p)
+        g2 = load_graph(p)  # re-parses and rebuilds the full member set
+        assert g2.source == "real" and g2.stats.bytes_parsed > 0
+        assert _edges(g2) == ([0, 1, 2], [1, 2, 3])
+        assert all(os.path.exists(os.path.join(g2.cache_dir, m))
+                   for m in CACHE_FILES)
+    # registry-name resolution skips a corrupted cache too (no source file)
+    assert cache_is_fresh(g2.cache_dir)
+    os.remove(os.path.join(g2.cache_dir, "indices.npy"))
+    assert not cache_is_fresh(g2.cache_dir)
 
 
 def test_cache_invalidated_when_file_changes(tmp_path):
