@@ -3,15 +3,29 @@
 The per-iteration history that ``summarize`` already records provides the
 whole curve in one run per target size; the paper's claim to check is
 convergence within T=20 for every target.
+
+The artifact also records the engine's driver overhead (DESIGN.md §12):
+the same run timed with ``driver_chunk=1`` (a host sync every round — the
+historical driver) vs the chunked ``lax.while_loop`` driver, reported as
+per-round wall seconds. Metrics are bit-identical between the two
+(tests/test_engine.py), so the delta is pure dispatch/sync overhead.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 from benchmarks.common import emit, save_artifact
 from repro.core import SummaryConfig, summarize
 from repro.graphs import generate
+
+
+def _timed_run(src, dst, v, cfg):
+    res = summarize(src, dst, v, cfg)  # warm the jit caches for this cfg
+    t0 = time.perf_counter()
+    res = summarize(src, dst, v, cfg, collect_history=False)
+    return res, time.perf_counter() - t0
 
 
 def run(dataset="amazon0601", scale=0.02, targets=(0.3, 0.5, 0.8), T=20,
@@ -19,8 +33,8 @@ def run(dataset="amazon0601", scale=0.02, targets=(0.3, 0.5, 0.8), T=20,
     src, dst, v = generate(dataset, seed=seed, scale=scale)
     rows = []
     for k_frac in targets:
-        res = summarize(src, dst, v,
-                        SummaryConfig(T=T, k_frac=k_frac, seed=seed))
+        cfg = SummaryConfig(T=T, k_frac=k_frac, seed=seed)
+        res = summarize(src, dst, v, cfg)
         for h in res.history:
             r = {"bench": "fig8", "dataset": dataset, "target": k_frac,
                  "t": h["t"], "re1": h["re1"],
@@ -32,6 +46,23 @@ def run(dataset="amazon0601", scale=0.02, targets=(0.3, 0.5, 0.8), T=20,
                      "iterations_run": res.iterations_run,
                      "re1": res.re1,
                      "rel_size": res.size_bits / res.input_size_bits})
+        emit(rows[-1])
+
+        # driver overhead: sync-every-round (R=1) vs the chunked driver
+        res_1, wall_1 = _timed_run(
+            src, dst, v, SummaryConfig(T=T, k_frac=k_frac, seed=seed,
+                                       driver_chunk=1))
+        res_c, wall_c = _timed_run(src, dst, v, cfg)
+        n = max(res_c.iterations_run, 1)
+        assert res_1.size_bits == res_c.size_bits  # same search, same metrics
+        rows.append({"bench": "fig8_driver", "target": k_frac,
+                     "driver_chunk": cfg.driver_chunk,
+                     "iterations_run": res_c.iterations_run,
+                     "wall_s_chunked": wall_c,
+                     "wall_s_sync_every_round": wall_1,
+                     "per_round_s_chunked": wall_c / n,
+                     "per_round_s_sync_every_round": wall_1 / n,
+                     "per_round_driver_overhead_s": (wall_1 - wall_c) / n})
         emit(rows[-1])
     save_artifact("fig8_iterations", rows)
     return rows

@@ -1,9 +1,11 @@
 """Kernel micro-benchmark: merge-gain scoring throughput.
 
-Reports wall time and achieved pair-score rate for (a) the jitted jnp
-oracle (the XLA path a CPU host runs) and (b) the Pallas kernel in
-interpret mode (functional check only — interpret timing is meaningless for
-TPU; the BlockSpec/VMEM sizing notes live in kernels/merge_gain.py).
+Reports wall time and achieved pair-score rate per kernel-registry backend:
+``"ref"`` (the jitted jnp oracle — the XLA path a CPU host runs) and
+``"pallas-interpret"`` (functional check only — interpret timing is
+meaningless for TPU; the BlockSpec/VMEM sizing notes live in
+kernels/merge_gain.py). On a real accelerator add ``"pallas"`` via
+``--backends``.
 """
 
 from __future__ import annotations
@@ -43,26 +45,25 @@ def bench(fn, args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def run(sizes=((256, 32, 128), (64, 64, 256)), iters=5) -> list[dict]:
+def run(sizes=((256, 32, 128), (64, 64, 256)), iters=5,
+        backends=("ref", "pallas-interpret")) -> list[dict]:
     rows = []
     for g, c, u in sizes:
         args = make_operands(g, c, u)
-        t_ref = bench(lambda *a: kops.merge_gain(*a, use_pallas=False), args,
-                      iters)
         pairs = g * c * c
-        r = {"bench": "kernel_merge_gain", "G": g, "C": c, "U": u,
-             "impl": "oracle_xla", "wall_s": t_ref,
-             "pair_scores_per_s": pairs / t_ref,
-             "flops_est": pairs * u * 12.0}
-        rows.append(r)
-        emit(r)
-        t_pl = bench(
-            lambda *a: kops.merge_gain(*a, use_pallas=True, interpret=True),
-            args, 1)
-        r2 = dict(r, impl="pallas_interpret", wall_s=t_pl,
-                  pair_scores_per_s=pairs / t_pl)
-        rows.append(r2)
-        emit(r2)
+        for backend in backends:
+            # interpret mode runs a host callback per grid step — time a
+            # single call, the number is a functional-path marker only
+            n_iters = iters if backend == "ref" else 1
+            t = bench(
+                lambda *a, _b=backend: kops.merge_gain(*a, backend=_b),
+                args, n_iters)
+            r = {"bench": "kernel_merge_gain", "G": g, "C": c, "U": u,
+                 "impl": backend, "wall_s": t,
+                 "pair_scores_per_s": pairs / t,
+                 "flops_est": pairs * u * 12.0}
+            rows.append(r)
+            emit(r)
     save_artifact("kernelbench", rows)
     return rows
 
@@ -70,8 +71,11 @@ def run(sizes=((256, 32, 128), (64, 64, 256)), iters=5) -> list[dict]:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--backends", nargs="+",
+                    default=["ref", "pallas-interpret"],
+                    choices=list(kops.KERNEL_BACKENDS))
     args = ap.parse_args()
-    run(iters=args.iters)
+    run(iters=args.iters, backends=tuple(args.backends))
 
 
 if __name__ == "__main__":

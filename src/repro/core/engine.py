@@ -1,0 +1,303 @@
+"""SummaryEngine: the single owner of Alg. 1, over a pluggable ``Backend``.
+
+Before this module the repo carried three divergent copies of the paper's
+merge→sparsify loop (``summarize()`` plus the ``make_distributed_step*``
+builders), each re-implementing the θ schedule, stopping rule, budget
+feasibility and finalize. The engine collapses them (DESIGN.md §12): it owns
+
+  * the θ schedule — Eq. (21), θ(t) = (1+t)⁻¹ for t < T, 0 at t = T;
+  * the stopping rule — Alg. 1 line 4 (``size_bits ≤ k``) plus convergence
+    (θ = 0 and no merges accepted);
+  * the ``ensure_budget`` feasibility rounds (DESIGN.md §4): extra θ = 0
+    merges until the membership term |V|log₂|S| fits under k;
+  * finalize — the Sect. 3.2.4 drop-to-k further sparsification,
+
+while a :class:`Backend` supplies the three device-side primitives:
+
+  * ``run_chunk``        — score/merge up to R rounds in one dispatch;
+  * ``num_supernodes``   — |S| of a state (feasibility check);
+  * ``sparsify_finalize``— the drop-to-k tail + exact Eq. (2)/(4) metrics.
+
+**Chunked, device-resident driver.** ``run_chunk`` executes up to
+``cfg.driver_chunk`` rounds inside one ``lax.while_loop`` dispatch: the
+stopping predicate is evaluated on device each round, per-round scalar
+stats land in an on-device [R]-buffer, and the host syncs only on chunk
+boundaries — instead of a full device→host round-trip per iteration.
+θ values are precomputed on the host (bit-identical to the historical
+per-round python floats) and passed as an f32[R] operand. Because each
+round runs exactly the same traced computation as the historical
+one-round-per-dispatch driver, metrics are bit-identical for any chunk
+size; ``driver_chunk=1`` recovers the historical host-synced driver
+(benchmarks/fig8_iterations.py measures the difference).
+
+Backends in-tree: :class:`LocalBackend` below (single device; the engine
+behind ``repro.core.summarize``) and
+``repro.core.distributed.make_distributed_backend`` (edge-sharded
+shard_map, hash- or group-owner pair routing). Streaming summarization and
+the query-serving layer plug in the same way: implement the three
+primitives, reuse the loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs, merge, sparsify
+from repro.core.types import (
+    SummaryConfig,
+    SummaryState,
+    init_state,
+    make_graph,
+)
+
+# Per-round scalar stats of the local backend (fixed key set → fixed-shape
+# on-device chunk buffers).
+LOCAL_STAT_KEYS = (
+    "size_bits",
+    "mdl_cost",
+    "re1",
+    "re2",
+    "nmerges",
+    "num_supernodes",
+    "num_superedges",
+    "total_reduction",
+)
+
+
+def theta_schedule_host(t: int, big_t: int) -> float:
+    """Eq. (21) on the host — the exact float the driver feeds round ``t``."""
+    return 1.0 / (1.0 + t) if t < big_t else 0.0
+
+
+class Backend(Protocol):
+    """Device-side primitives the engine drives (DESIGN.md §12)."""
+
+    cfg: SummaryConfig
+    num_nodes: int
+    stat_keys: tuple[str, ...]
+
+    def input_size_bits(self) -> float:
+        """Size(G), Eq. (3) — the quantity budgets are fractions of."""
+        ...
+
+    def init(self) -> SummaryState:
+        """Ḡ := G (Alg. 1 lines 1–2)."""
+        ...
+
+    def run_chunk(
+        self, state: SummaryState, thetas: jax.Array, t0: int,
+        k_bits: float, limit: int,
+    ) -> tuple[SummaryState, dict[str, jax.Array], jax.Array]:
+        """Up to ``limit`` merge rounds in one dispatch (``thetas[i]`` is
+        round ``t0 + i``'s θ). Returns the new state, per-round stat
+        buffers ``{key: f32[R]}``, and the number of rounds executed."""
+        ...
+
+    def num_supernodes(self, state: SummaryState) -> int:
+        ...
+
+    def sparsify_finalize(
+        self, state: SummaryState, k_bits: float, salt: int
+    ) -> dict[str, Any]:
+        """Sect. 3.2.4 drop-to-k + final metrics; backend-shaped payload."""
+        ...
+
+
+@dataclasses.dataclass
+class EngineRun:
+    """Everything Alg. 1 produced, before backend-specific result assembly."""
+
+    state: SummaryState
+    history: list[dict]
+    last_stats: dict | None  # stats of the last merge round (None if T=0)
+    iterations_run: int
+    input_size_bits: float
+    k_bits: float
+    finalize: dict[str, Any]  # backend payload from sparsify_finalize
+    sparsify_wall_s: float
+
+
+class SummaryEngine:
+    """Alg. 1 against a :class:`Backend`; one loop for every execution mode."""
+
+    def __init__(self, backend: Backend):
+        self.backend = backend
+        self.cfg = backend.cfg
+
+    def _should_stop(self, stats: dict, theta: float, k_bits: float) -> bool:
+        if stats["size_bits"] <= k_bits:
+            return True
+        # converged: θ=0 accepts any cost-reducing merge; none left
+        return stats["nmerges"] == 0 and theta == 0.0
+
+    def run(self, collect_history: bool = True) -> EngineRun:
+        cfg, backend = self.cfg, self.backend
+        size_g = backend.input_size_bits()
+        k_bits = cfg.target_bits(size_g)
+        state = backend.init()
+        history: list[dict] = []
+        t_wall = time.perf_counter()
+        chunk = max(1, cfg.driver_chunk)
+
+        def run_rounds(state, t0: int, limit: int, thetas: list[float]):
+            """One device dispatch of ≤ ``limit`` rounds; host-side unpack."""
+            th = np.zeros((chunk,), np.float32)
+            th[: len(thetas)] = np.asarray(thetas, np.float32)
+            state, buf, rounds = backend.run_chunk(
+                state, jnp.asarray(th), t0, k_bits, limit
+            )
+            rounds = int(rounds)
+            buf = {k: np.asarray(v) for k, v in buf.items()}
+            rows = [
+                {k: float(buf[k][i]) for k in backend.stat_keys}
+                for i in range(rounds)
+            ]
+            return state, rows
+
+        last: dict | None = None
+        stopped = False
+        t = 1
+        while t <= cfg.T and not stopped:
+            limit = min(chunk, cfg.T - t + 1)
+            thetas = [theta_schedule_host(tt, cfg.T)
+                      for tt in range(t, t + limit)]
+            state, rows = run_rounds(state, t, limit, thetas)
+            wall = time.perf_counter() - t_wall
+            for i, row in enumerate(rows):
+                last = row
+                if collect_history:
+                    history.append(
+                        dict(row, t=t + i, theta=thetas[i], wall_s=wall)
+                    )
+            t += len(rows)
+            last_theta = thetas[len(rows) - 1]
+            stopped = self._should_stop(last, last_theta, k_bits)
+        iterations_run = t - 1
+
+        # budget-feasibility loop (DESIGN.md §4): membership bits
+        # |V|log₂|S| must fit under k before edge-dropping can finish.
+        if cfg.ensure_budget:
+            v = backend.num_nodes
+            for _extra in range(cfg.max_extra_iters):
+                s_now = backend.num_supernodes(state)
+                membership = v * float(np.log2(max(s_now, 2)))
+                if membership <= k_bits or s_now <= 2:
+                    break
+                state, rows = run_rounds(state, iterations_run + 1, 1, [0.0])
+                iterations_run += 1
+                last = rows[0]
+                if collect_history:
+                    history.append(dict(
+                        rows[0], t=iterations_run, theta=0.0,
+                        wall_s=time.perf_counter() - t_wall,
+                    ))
+                if last["nmerges"] == 0:
+                    break
+
+        t_sp = time.perf_counter()
+        finalize = backend.sparsify_finalize(state, k_bits,
+                                             iterations_run + 1)
+        sparsify_wall_s = time.perf_counter() - t_sp
+        return EngineRun(
+            state=state,
+            history=history,
+            last_stats=last,
+            iterations_run=iterations_run,
+            input_size_bits=size_g,
+            k_bits=k_bits,
+            finalize=finalize,
+            sparsify_wall_s=sparsify_wall_s,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Local (single-device) backend — the engine behind repro.core.summarize
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _local_chunk(src, dst, state, thetas, k_bits, limit, cfg: SummaryConfig):
+    """≤ ``limit`` merge rounds in one ``lax.while_loop`` dispatch."""
+    r = thetas.shape[0]
+    buf0 = {k: jnp.zeros((r,), jnp.float32) for k in LOCAL_STAT_KEYS}
+
+    def cond(carry):
+        i, _state, done, _buf = carry
+        return (i < limit) & ~done
+
+    def body(carry):
+        i, state, _done, buf = carry
+        theta = thetas[i]
+        new_state, stats = merge.merge_iteration(src, dst, state, cfg, theta)
+        buf = {
+            k: buf[k].at[i].set(stats[k].astype(jnp.float32))
+            for k in LOCAL_STAT_KEYS
+        }
+        done = (stats["size_bits"] <= k_bits) | (
+            (stats["nmerges"] == 0) & (theta == 0.0)
+        )
+        return i + 1, new_state, done, buf
+
+    rounds, state, _done, buf = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), state, jnp.bool_(False), buf0)
+    )
+    return state, buf, rounds
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_nodes", "num_edges"))
+def _local_finalize(src, dst, state, k_bits, cfg: SummaryConfig,
+                    num_nodes, num_edges):
+    pt = costs.build_pair_table(src, dst, state)
+    drop, after = sparsify.further_sparsify(
+        pt,
+        state,
+        num_nodes,
+        num_edges,
+        k_bits,
+        cbar_mode=cfg.cbar_mode,
+        re_guard=cfg.re_guard,
+        error_p=cfg.error_p,
+    )
+    return pt, after["keep"], after
+
+
+class LocalBackend:
+    """Single-device Alg. 1 primitives over an in-memory edge list."""
+
+    stat_keys = LOCAL_STAT_KEYS
+
+    def __init__(self, src, dst, num_nodes: int, cfg: SummaryConfig):
+        self.graph, self.num_nodes = make_graph(src, dst, num_nodes)
+        self.num_edges = self.graph.num_edges
+        self.cfg = cfg
+
+    def input_size_bits(self) -> float:
+        return costs.input_size_bits(self.num_nodes, self.num_edges)
+
+    def init(self) -> SummaryState:
+        return init_state(self.num_nodes, self.cfg.seed)
+
+    def run_chunk(self, state, thetas, t0, k_bits, limit):
+        del t0  # local rounds draw their randomness from state.rng alone
+        return _local_chunk(
+            self.graph.src, self.graph.dst, state, thetas,
+            jnp.float32(k_bits), jnp.int32(limit), self.cfg,
+        )
+
+    def num_supernodes(self, state) -> int:
+        return int(jnp.sum(state.size > 0))
+
+    def sparsify_finalize(self, state, k_bits, salt) -> dict:
+        del salt  # deterministic closed-form drop — no re-randomization
+        pt, keep, after = _local_finalize(
+            self.graph.src, self.graph.dst, state, k_bits, self.cfg,
+            self.num_nodes, self.num_edges,
+        )
+        return {"pair_table": pt, "keep": keep, "after": after}

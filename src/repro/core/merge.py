@@ -107,11 +107,15 @@ def merge_iteration(
         gt.w,
         cbar,
         log2v,
-        use_pallas=cfg.use_pallas,
-        interpret=cfg.interpret,
+        backend=kops.resolve_kernel_backend(cfg.kernel_backend),
     )
     a, b, sel = select_matching(rel, gt.members, theta)
     new_state, nmerges = apply_merges(state, a, b, sel)
+    # summed Eq. 20 absolute reduction (bits) of the accepted pairs: gather
+    # each row's best-partner red — the same argmax select_matching used
+    best_j = jnp.argmax(rel, axis=-1)
+    red_best = jnp.take_along_axis(red, best_j[..., None], axis=-1)[..., 0]
+    total_reduction = jnp.sum(jnp.where(sel, red_best.reshape(-1), 0.0))
     new_state = SummaryState(
         node2super=new_state.node2super,
         size=new_state.size,
@@ -126,6 +130,6 @@ def merge_iteration(
         "re2": metrics["re2"],
         "num_supernodes": metrics["num_supernodes"],
         "num_superedges": metrics["num_superedges"],
-        "total_reduction": jnp.sum(jnp.where(sel, 0.0, 0.0)),
+        "total_reduction": total_reduction,
     }
     return new_state, stats

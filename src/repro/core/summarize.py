@@ -12,50 +12,21 @@ edge-dropping can reach the budget), extra θ=0 merge rounds run until the
 budget is reachable — this realizes the paper's "always gives a summary
 graph whose size does not exceed a given size" claim for very small k.
 
-The per-iteration body is one jit-compiled function; the python-level loop
-only inspects scalar metrics (size in bits) for the stopping rule, matching
-the paper's per-iteration check (Alg. 1 line 4).
+The loop itself lives in :class:`repro.core.engine.SummaryEngine`
+(DESIGN.md §12), driven here through the single-device
+:class:`~repro.core.engine.LocalBackend`: the engine dispatches
+``cfg.driver_chunk`` jit-compiled rounds per device round-trip
+(``lax.while_loop``) and inspects only scalar metrics on chunk boundaries,
+matching the paper's per-iteration check (Alg. 1 line 4) without a
+device→host sync every round.
 """
 
 from __future__ import annotations
 
-import functools
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costs, merge, sparsify
-from repro.core.types import (
-    SummaryConfig,
-    SummaryResult,
-    SummaryState,
-    init_state,
-    make_graph,
-)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "num_nodes"))
-def _iteration(src, dst, state, theta, cfg: SummaryConfig, num_nodes: int):
-    return merge.merge_iteration(src, dst, state, cfg, theta)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "num_nodes", "num_edges"))
-def _finalize(src, dst, state, k_bits, cfg: SummaryConfig, num_nodes, num_edges):
-    pt = costs.build_pair_table(src, dst, state)
-    drop, after = sparsify.further_sparsify(
-        pt,
-        state,
-        num_nodes,
-        num_edges,
-        k_bits,
-        cbar_mode=cfg.cbar_mode,
-        re_guard=cfg.re_guard,
-        error_p=cfg.error_p,
-    )
-    keep = after["keep"]
-    return pt, keep, after
+from repro.core.engine import LocalBackend, SummaryEngine
+from repro.core.types import SummaryConfig, SummaryResult
 
 
 def summarize(
@@ -66,72 +37,28 @@ def summarize(
     collect_history: bool = True,
 ) -> SummaryResult:
     """Run SSumM on an edge list. Returns the summary graph + exact metrics."""
-    graph, v = make_graph(src, dst, num_nodes)
-    e = graph.num_edges
-    size_g = costs.input_size_bits(v, e)
-    k_bits = cfg.target_bits(size_g)
+    backend = LocalBackend(src, dst, num_nodes, cfg)
+    run = SummaryEngine(backend).run(collect_history=collect_history)
 
-    state = init_state(v, cfg.seed)
-    history: list[dict] = []
-    t_wall = time.perf_counter()
-
-    def run_round(state: SummaryState, theta_val) -> tuple[SummaryState, dict]:
-        theta = jnp.asarray(theta_val, jnp.float32)
-        new_state, stats = _iteration(graph.src, graph.dst, state, theta, cfg, v)
-        return new_state, {k: float(x) for k, x in stats.items()}
-
-    iterations_run = 0
-    for t in range(1, cfg.T + 1):
-        theta = 1.0 / (1.0 + t) if t < cfg.T else 0.0
-        state, stats = run_round(state, theta)
-        iterations_run = t
-        if collect_history:
-            stats["t"] = t
-            stats["theta"] = theta
-            stats["wall_s"] = time.perf_counter() - t_wall
-            history.append(stats)
-        if stats["size_bits"] <= k_bits:
-            break
-        if stats["nmerges"] == 0 and theta == 0.0:
-            break  # converged: nothing left that reduces the cost
-
-    # budget-feasibility loop: membership bits |V|log₂|S| must be < k before
-    # edge-dropping can finish the job.
-    if cfg.ensure_budget:
-        for extra in range(cfg.max_extra_iters):
-            s_now = int(jnp.sum(state.size > 0))
-            membership = v * float(np.log2(max(s_now, 2)))
-            if membership <= k_bits or s_now <= 2:
-                break
-            state, stats = run_round(state, 0.0)
-            iterations_run += 1
-            if collect_history:
-                stats["t"] = iterations_run
-                stats["theta"] = 0.0
-                stats["wall_s"] = time.perf_counter() - t_wall
-                history.append(stats)
-            if stats["nmerges"] == 0:
-                break
-
-    pt, keep, after = _finalize(graph.src, graph.dst, state, k_bits, cfg, v, e)
-
-    keep_np = np.asarray(keep)
+    pt = run.finalize["pair_table"]
+    after = run.finalize["after"]
+    keep_np = np.asarray(run.finalize["keep"])
     lo = np.asarray(pt.lo)[keep_np]
     hi = np.asarray(pt.hi)[keep_np]
     w = np.asarray(pt.cnt)[keep_np].astype(np.int64)
     return SummaryResult(
-        node2super=np.asarray(state.node2super),
-        super_size=np.asarray(state.size),
+        node2super=np.asarray(run.state.node2super),
+        super_size=np.asarray(run.state.size),
         edge_lo=lo,
         edge_hi=hi,
         edge_w=w,
         num_supernodes=int(after["num_supernodes"]),
         num_superedges=int(after["num_superedges"]),
         size_bits=float(after["size_bits"]),
-        input_size_bits=float(size_g),
+        input_size_bits=float(run.input_size_bits),
         re1=float(after["re1"]),
         re2=float(after["re2"]),
         mdl_cost=float(after["mdl_cost"]),
-        iterations_run=iterations_run,
-        history=history,
+        iterations_run=run.iterations_run,
+        history=run.history,
     )

@@ -103,13 +103,17 @@ class SummaryConfig:
     error_p: int = 1  # p for the final sparsification deltas (footnote 4)
     ensure_budget: bool = True  # extra θ=0 iterations if membership term > k
     max_extra_iters: int = 40
-    # merge-gain scoring backend: on TPU set use_pallas=True, interpret=False
-    # (the deployment config). On this CPU container the default is the
-    # jitted jnp oracle — Pallas interpret mode is a Python callback and
-    # would turn wall-clock benchmarks into interpreter measurements; the
-    # kernel itself is validated in interpret mode by tests/test_kernels.py.
-    use_pallas: bool = False
-    interpret: bool = True  # Pallas interpret mode (CPU container); False on TPU
+    # merge-gain scoring backend, resolved through the kernel-dispatch
+    # registry (repro.kernels.ops): "ref" (jitted jnp oracle — the XLA path
+    # a CPU host runs), "pallas-interpret" (kernel body in Python, the CI
+    # validation lane), or "pallas" (compiled, real accelerators). None
+    # defers to $SSUMM_KERNEL, then "ref" — an explicit value here always
+    # beats the environment.
+    kernel_backend: str | None = None
+    # R — merge rounds per device dispatch of the engine's chunked driver
+    # (lax.while_loop; scalar metrics reach the host only on chunk
+    # boundaries). 1 recovers the historical sync-every-round driver.
+    driver_chunk: int = 8
     seed: int = 0
 
     def target_bits(self, size_g: float) -> float:

@@ -2,7 +2,7 @@
 
 These are the correctness ground truth: small, obviously-right, fully
 vectorized implementations used by tests (``assert_allclose`` sweeps) and as
-the CPU fallback when ``use_pallas=False``.
+the CPU path behind the ``"ref"`` registry backend (kernels/ops.py).
 """
 
 from __future__ import annotations

@@ -171,7 +171,7 @@ def run_ssumm_cell(dataset: str, mesh_kind: str, out_dir: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     n_dev = mesh_device_count(mesh)
     e_pad = -(-e // n_dev) * n_dev
-    cfg = SummaryConfig(group_size=group_size, use_pallas=False)
+    cfg = SummaryConfig(group_size=group_size)
     rec = {
         "arch": f"ssumm_{dataset}", "shape": "iteration", "mesh": mesh_kind,
         "mesh_shape": dict(mesh.shape), "n_devices": n_dev, "V": v, "E": e,

@@ -29,15 +29,12 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SummaryConfig, summarize
-from repro.core.distributed import (
-    make_distributed_sparsify,
-    make_distributed_step_compact,
-)
-from repro.core.types import init_state, make_graph
+from repro.core.distributed import make_distributed_backend
+from repro.core.engine import SummaryEngine
+from repro.core.types import make_graph
 from repro.graphs import DATASETS, load_graph
 from repro.graphs.feed import EdgeShards, shard_edges, shard_edges_from_cache
 from repro.runtime import make_mesh_from_plan, plan_mesh
@@ -45,20 +42,17 @@ from repro.runtime import make_mesh_from_plan, plan_mesh
 
 def build_distributed_pipeline(mesh, cfg: SummaryConfig, num_nodes: int,
                                num_edges: int):
-    """The jitted (merge step, sparsify step) pair for one problem size.
+    """The jitted distributed backend for one problem size (DESIGN.md §12).
 
     Each call builds *fresh* jit closures — callers that run the pipeline
     repeatedly at the same shapes (benchmarks timing warm runs) must build
-    once and pass the pair to :func:`run_distributed`, otherwise every run
-    retraces and recompiles.
+    once and pass the backend to :func:`run_distributed`, otherwise every
+    run retraces and recompiles.
     """
-    step = make_distributed_step_compact(mesh, cfg, num_nodes, num_edges,
-                                         capacity_factor=32.0,
-                                         lean_sort=True)
-    sparsify_step = make_distributed_sparsify(mesh, cfg, num_nodes,
-                                              num_edges,
-                                              capacity_factor=32.0)
-    return step, sparsify_step
+    return make_distributed_backend(mesh, cfg, num_nodes, num_edges,
+                                    grouping="compact",
+                                    capacity_factor=32.0,
+                                    lean_sort=True)
 
 
 def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
@@ -76,6 +70,12 @@ def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
     rounds. ``src``/``dst`` are then ignored (pass ``None``). Without it,
     the edge list is canonicalized and fed through the in-memory fallback;
     both paths produce bit-identical metrics (``tests/feed_check.py``).
+
+    The loop itself is :class:`repro.core.engine.SummaryEngine` over the
+    distributed backend (DESIGN.md §12): ``cfg.driver_chunk`` merge rounds
+    run per dispatch inside the shard_map body, and the Sect. 3.2.4
+    drop-to-k tail (distributed ξ-th order statistic, DESIGN.md §7) is the
+    backend's finalize.
     """
     if shards is None:
         graph, _ = make_graph(src, dst, v)
@@ -89,34 +89,15 @@ def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
             f"shards came from a cache with |V|={shards.num_nodes} but "
             f"run_distributed was called with v={v}")
     e = shards.num_edges
-    src_p, dst_p = shards.src, shards.dst
     if pipeline is None:
         pipeline = build_distributed_pipeline(mesh, cfg, v, e)
-    step, sparsify_step = pipeline
-    state = init_state(v, cfg.seed)
-    size_g = 2.0 * e * float(np.log2(max(v, 2)))
-    k_bits = cfg.target_bits(size_g)
-    stats = {}
-    t = 0
-    with mesh:
-        for t in range(1, cfg.T + 1):
-            theta = 1.0 / (1.0 + t) if t < cfg.T else 0.0
-            state, stats = step(src_p, dst_p, state,
-                                jnp.asarray(theta, jnp.float32),
-                                jnp.asarray(t, jnp.uint32))
-            if float(stats["size_bits"]) <= k_bits:
-                break
-        # Sect. 3.2.4: drop minimum-ΔRE superedges to land exactly within k
-        # (distributed ξ-th order statistic; DESIGN.md §7).
-        t_sp = time.time()
-        sp_stats, _pairs = sparsify_step(src_p, dst_p, state,
-                                         jnp.asarray(k_bits, jnp.float32),
-                                         jnp.asarray(t + 1, jnp.uint32))
-        sp_stats = {k: float(x) for k, x in sp_stats.items()}
-        sp_stats["sparsify_wall_s"] = time.time() - t_sp
-    out = {k: float(x) for k, x in stats.items()}
+    backend = pipeline.bind(shards.src, shards.dst)
+    run = SummaryEngine(backend).run(collect_history=False)
+    out = {k: float(x) for k, x in (run.last_stats or {}).items()}
+    sp_stats = {k: float(x) for k, x in run.finalize["stats"].items()}
+    sp_stats["sparsify_wall_s"] = run.sparsify_wall_s
     out.update(sp_stats)
-    return state, out, size_g
+    return run.state, out, run.input_size_bits
 
 
 def peak_rss_mb() -> float | None:

@@ -11,7 +11,12 @@ Checks, on an 8-device host mesh:
      (psum'd histogram order statistic) produces a drop mask bit-identical
      to single-host further_sparsify and matching post-drop Size(Ḡ)/RE —
      including the ξ == 0 (budget already met) and ξ ≥ |P| (drop
-     everything) degenerate branches.
+     everything) degenerate branches;
+  5. engine parity: SummaryEngine over the unified DistributedBackend
+     (while_loop-chunked driver inside the shard_map body, then the
+     sparsify finalize) is bit-identical to the explicit per-round
+     host loop over the same step — for both driver_chunk=8 and the
+     history-equivalent driver_chunk=1.
 """
 
 import os
@@ -24,13 +29,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.core import costs, sparsify
 from repro.core.distributed import (
+    make_distributed_backend,
     make_distributed_sparsify,
     make_distributed_step,
     make_distributed_step_compact,
     pad_and_shard_edges,
 )
+from repro.core.engine import SummaryEngine
 from repro.core.types import SummaryConfig, init_state, make_graph
 from repro.graphs import generate
 from repro.launch.mesh import make_host_mesh
@@ -116,13 +125,56 @@ def check_sparsify(graph, v, e, cfg, mesh, src_p, dst_p, state, k_bits,
     return int(stats["dropped"])
 
 
+def check_engine(backend, cfg, mesh, src_p, dst_p, label):
+    """SummaryEngine over the backend ≡ the explicit per-round host loop.
+
+    The engine runs the while_loop-chunked ``backend.chunk`` program; the
+    reference drives ``backend.step`` (a separate straight-line trace) one
+    round at a time with host-python θ and the historical stopping rule —
+    every metric, the sparsify payload, and the final partition must be
+    bit-identical.
+    """
+    import copy
+
+    backend = copy.copy(backend)
+    backend.cfg = cfg
+    k_bits = cfg.target_bits(backend.input_size_bits())
+    state = backend.init()
+    stats = {}
+    t = 0
+    with mesh:
+        for t in range(1, cfg.T + 1):
+            theta = 1.0 / (1.0 + t) if t < cfg.T else 0.0
+            state, stats = backend.step(src_p, dst_p, state,
+                                        jnp.float32(theta), jnp.uint32(t))
+            if float(stats["size_bits"]) <= k_bits:
+                break
+        ref_sp, _ = backend.sparsify(src_p, dst_p, state,
+                                     jnp.float32(k_bits), jnp.uint32(t + 1))
+
+    run = SummaryEngine(backend.bind(src_p, dst_p)).run()
+    assert run.iterations_run == t, (label, run.iterations_run, t)
+    for k in stats:
+        assert float(run.last_stats[k]) == float(stats[k]), (
+            label, k, float(run.last_stats[k]), float(stats[k]))
+    for k in ref_sp:
+        assert float(run.finalize["stats"][k]) == float(ref_sp[k]), (
+            label, k, float(run.finalize["stats"][k]), float(ref_sp[k]))
+    np.testing.assert_array_equal(np.asarray(run.state.node2super),
+                                  np.asarray(state.node2super),
+                                  err_msg=label)
+    np.testing.assert_array_equal(np.asarray(run.state.size),
+                                  np.asarray(state.size), err_msg=label)
+    return run
+
+
 def main():
     assert jax.device_count() == 8
     src, dst, v = generate("ego-facebook", seed=0, scale=0.05)
     graph, _ = make_graph(src, dst, v)
     e = graph.num_edges
     mesh = make_host_mesh((2, 4), ("data", "model"))
-    cfg = SummaryConfig(T=5, k_frac=0.3, use_pallas=False)
+    cfg = SummaryConfig(T=5, k_frac=0.3)
     src_p, dst_p = pad_and_shard_edges(np.asarray(graph.src),
                                        np.asarray(graph.dst), mesh)
 
@@ -186,14 +238,37 @@ def main():
     assert none == 0, "sparsify: ξ=0 case dropped superedges"
     check_sparsify(graph, v, e, cfg, mesh, src_p, dst_p, state, 1.0,
                    "sparsify drop-everything")
-    cfg2 = SummaryConfig(T=5, k_frac=0.3, use_pallas=False, error_p=2)
+    cfg2 = SummaryConfig(T=5, k_frac=0.3, error_p=2)
     check_sparsify(graph, v, e, cfg2, mesh, src_p, dst_p, state,
                    0.9 * size_now, "sparsify error_p=2")
+
+    # ---- engine over the unified backend --------------------------------
+    # One backend object, cfg swapped host-side: k_bits/ensure_budget are
+    # operands / host logic, so the degenerate-budget cases reuse the
+    # compiled programs; only driver_chunk=1 retraces (R=1 buffers).
+    backend = make_distributed_backend(mesh, cfg, v, e, grouping="compact",
+                                       capacity_factor=64.0, lean_sort=True)
+    run8 = check_engine(backend, cfg, mesh, src_p, dst_p, "engine chunk=8")
+    run1 = check_engine(backend, dataclasses.replace(cfg, driver_chunk=1),
+                        mesh, src_p, dst_p, "engine chunk=1")
+    hist_keys = ("size_bits", "re1", "nmerges", "num_supernodes")
+    assert [{k: r[k] for k in hist_keys} for r in run8.history] == \
+           [{k: r[k] for k in hist_keys} for r in run1.history], \
+        "chunked driver history differs from sync-every-round driver"
+    # ξ=0 (budget met at t=1) and drop-everything finalize branches
+    check_engine(backend,
+                 dataclasses.replace(cfg, k_frac=None, k_bits=1e12),
+                 mesh, src_p, dst_p, "engine xi=0")
+    check_engine(backend,
+                 dataclasses.replace(cfg, k_frac=None, k_bits=1.0,
+                                     ensure_budget=False),
+                 mesh, src_p, dst_p, "engine drop-all")
 
     print(json.dumps({"ok": True, "merged": merged, "merged_compact": merged_c,
                       "final_size_bits": final,
                       "final_size_bits_compact": final_c,
-                      "sparsify_dropped": dropped}))
+                      "sparsify_dropped": dropped,
+                      "engine_iterations": run8.iterations_run}))
 
 
 if __name__ == "__main__":

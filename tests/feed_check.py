@@ -53,7 +53,7 @@ def shard_contents(arr) -> list[np.ndarray]:
 def main():
     assert jax.device_count() == 8
     mesh = make_host_mesh((2, 4), ("data", "model"))
-    cfg = SummaryConfig(T=4, k_frac=0.35, use_pallas=False)
+    cfg = SummaryConfig(T=4, k_frac=0.35)
 
     # ---- 1. cache feed ≡ in-memory feed ≡ legacy construction ----------
     src, dst, v = generate("ego-facebook", seed=0, scale=0.05)

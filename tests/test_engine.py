@@ -1,0 +1,81 @@
+"""SummaryEngine regression against pre-refactor golden metrics.
+
+``tests/golden/engine_local.json`` was recorded from the straight-line
+one-round-per-dispatch driver the engine replaced: every per-round history
+metric and the final ``SummaryResult`` must stay bit-identical through the
+while_loop-chunked driver, for any chunk size (``driver_chunk=1`` is the
+history-equivalent sync-every-round mode; the distributed analogue lives in
+``tests/dist_check.py``).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import SummaryConfig, summarize
+from repro.core.engine import LocalBackend, SummaryEngine, theta_schedule_host
+from repro.graphs import generate
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "engine_local.json"
+
+HISTORY_KEYS = ("size_bits", "re1", "re2", "nmerges", "num_supernodes",
+                "num_superedges", "mdl_cost", "t", "theta")
+
+
+def _load():
+    g = json.loads(GOLDEN.read_text())
+    fx, cfg = g["fixture"], g["config"]
+    src, dst, v = generate(fx["dataset"], seed=fx["gen_seed"],
+                           scale=fx["scale"])
+    assert v == fx["V"]
+    return src, dst, v, cfg, g
+
+
+@pytest.mark.parametrize("driver_chunk", [8, 1, 3])
+def test_local_engine_matches_golden(driver_chunk):
+    src, dst, v, cfg_d, g = _load()
+    cfg = SummaryConfig(T=cfg_d["T"], k_frac=cfg_d["k_frac"],
+                        seed=cfg_d["seed"], driver_chunk=driver_chunk)
+    res = summarize(src, dst, v, cfg)
+
+    assert len(res.history) == len(g["history"])
+    for got, want in zip(res.history, g["history"]):
+        for k in HISTORY_KEYS:
+            assert got[k] == want[k], (driver_chunk, got["t"], k,
+                                       got[k], want[k])
+
+    final = g["final"]
+    assert res.size_bits == final["size_bits"]
+    assert res.input_size_bits == final["input_size_bits"]
+    assert res.re1 == final["re1"]
+    assert res.re2 == final["re2"]
+    assert res.mdl_cost == final["mdl_cost"]
+    assert res.num_supernodes == final["num_supernodes"]
+    assert res.num_superedges == final["num_superedges"]
+    assert res.iterations_run == final["iterations_run"]
+    assert int(np.sum(res.node2super)) == final["node2super_sum"]
+    assert int(np.sum(res.edge_w)) == final["edge_w_sum"]
+
+
+def test_theta_schedule_host_matches_paper():
+    # Eq. (21): θ(t) = (1+t)⁻¹ before the last round, 0 at t = T
+    assert theta_schedule_host(1, 10) == 0.5
+    assert theta_schedule_host(9, 10) == 0.1
+    assert theta_schedule_host(10, 10) == 0.0
+
+
+def test_engine_run_payload_consistent():
+    """EngineRun bookkeeping: k_bits, last_stats, and history agree."""
+    src, dst, v, cfg_d, _ = _load()
+    cfg = SummaryConfig(T=4, k_frac=0.3, seed=1)
+    backend = LocalBackend(src, dst, v, cfg)
+    run = SummaryEngine(backend).run()
+    assert run.k_bits == cfg.target_bits(run.input_size_bits)
+    assert run.iterations_run == len(run.history)
+    assert run.last_stats is not None
+    for k in backend.stat_keys:
+        assert run.last_stats[k] == run.history[-1][k]
+    assert run.sparsify_wall_s >= 0.0
+    assert "after" in run.finalize

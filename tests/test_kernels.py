@@ -1,5 +1,7 @@
-"""Per-kernel validation (deliverable c): Pallas interpret-mode vs the
-pure-jnp oracle, swept over shapes and operand regimes."""
+"""Per-kernel validation (deliverable c): every registry backend vs the
+pure-jnp oracle, swept over shapes and operand regimes — plus the
+kernel-dispatch registry's resolution rules (config > $SSUMM_KERNEL > ref).
+"""
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +10,18 @@ import pytest
 
 from repro.kernels import ops as kops
 from repro.kernels import ref
+
+
+def _compiled_pallas_available():
+    """Compiled (non-interpret) Pallas needs a real accelerator backend."""
+    return jax.default_backend() != "cpu"
+
+
+# every backend the registry can resolve on this host
+PARITY_BACKENDS = [
+    b for b in kops.KERNEL_BACKENDS
+    if b != "pallas" or _compiled_pallas_available()
+]
 
 
 def _operands(g, c, u, seed=0, dense=False):
@@ -31,20 +45,94 @@ def _operands(g, c, u, seed=0, dense=False):
     return [jnp.asarray(x) for x in (m, n, s, t.astype(np.float32), n_u, cidx, w)]
 
 
+# ---------------------------------------------------------------------------
+# Kernel-dispatch registry resolution
+# ---------------------------------------------------------------------------
+
+
+def test_registry_default_is_ref(monkeypatch):
+    monkeypatch.delenv(kops.ENV_VAR, raising=False)
+    assert kops.resolve_kernel_backend(None) == "ref"
+
+
+def test_registry_env_resolution(monkeypatch):
+    monkeypatch.setenv(kops.ENV_VAR, "pallas-interpret")
+    assert kops.resolve_kernel_backend(None) == "pallas-interpret"
+
+
+def test_registry_config_beats_env(monkeypatch):
+    monkeypatch.setenv(kops.ENV_VAR, "pallas-interpret")
+    assert kops.resolve_kernel_backend("ref") == "ref"
+
+
+@pytest.mark.parametrize("source", ["config", "env"])
+def test_registry_unknown_backend_raises(monkeypatch, source):
+    if source == "config":
+        monkeypatch.delenv(kops.ENV_VAR, raising=False)
+        with pytest.raises(ValueError) as exc:
+            kops.resolve_kernel_backend("no-such-kernel")
+    else:
+        monkeypatch.setenv(kops.ENV_VAR, "no-such-kernel")
+        with pytest.raises(ValueError) as exc:
+            kops.resolve_kernel_backend(None)
+    msg = str(exc.value)
+    assert "no-such-kernel" in msg
+    for name in kops.KERNEL_BACKENDS:  # error lists the valid set
+        assert name in msg
+
+
+def test_registry_backend_from_flags_compat():
+    assert kops.backend_from_flags(False) == "ref"
+    assert kops.backend_from_flags(True, interpret=True) == "pallas-interpret"
+    assert kops.backend_from_flags(True, interpret=False) == "pallas"
+
+
+def test_config_kernel_backend_reaches_dispatch(monkeypatch):
+    from repro.core.types import SummaryConfig
+
+    monkeypatch.setenv(kops.ENV_VAR, "no-such-kernel")
+    # an explicit config value must win over a (broken) environment …
+    assert kops.resolve_kernel_backend(
+        SummaryConfig(kernel_backend="ref").kernel_backend) == "ref"
+    # … and the default config defers to the environment
+    with pytest.raises(ValueError):
+        kops.resolve_kernel_backend(SummaryConfig().kernel_backend)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity on the merge-gain / pair-cost fixtures
+# ---------------------------------------------------------------------------
+
+
 @pytest.mark.parametrize("g,c,u", [(1, 4, 8), (3, 8, 16), (2, 16, 32), (5, 32, 64)])
 @pytest.mark.parametrize("dense", [False, True])
 def test_merge_gain_matches_oracle(g, c, u, dense):
     args = _operands(g, c, u, seed=g * 100 + u, dense=dense)
     cbar, log2v = jnp.float32(60.0), jnp.float32(20.0)
-    rel_p, red_p = kops.merge_gain(*args, cbar, log2v, use_pallas=True,
-                                   interpret=True)
-    rel_r, red_r = kops.merge_gain(*args, cbar, log2v, use_pallas=False)
+    rel_p, red_p = kops.merge_gain(*args, cbar, log2v,
+                                   backend="pallas-interpret")
+    rel_r, red_r = kops.merge_gain(*args, cbar, log2v, backend="ref")
     np.testing.assert_allclose(np.asarray(red_p), np.asarray(red_r),
                                rtol=1e-5, atol=1e-3)
     # rel contains -inf on invalid entries — compare masks then values
     mp, mr = np.isfinite(rel_p), np.isfinite(rel_r)
     np.testing.assert_array_equal(mp, mr)
     np.testing.assert_allclose(np.asarray(rel_p)[mp], np.asarray(rel_r)[mr],
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_merge_gain_all_backends_agree(backend):
+    """Every resolvable registry backend vs the jnp oracle, one fixture."""
+    args = _operands(3, 8, 16, seed=11)
+    cbar, log2v = jnp.float32(60.0), jnp.float32(20.0)
+    rel_r, red_r = ref.merge_gain_ref(*args, cbar, log2v)
+    rel_b, red_b = kops.merge_gain(*args, cbar, log2v, backend=backend)
+    np.testing.assert_allclose(np.asarray(red_b), np.asarray(red_r),
+                               rtol=1e-5, atol=1e-3)
+    mb, mr = np.isfinite(rel_b), np.isfinite(rel_r)
+    np.testing.assert_array_equal(mb, mr)
+    np.testing.assert_allclose(np.asarray(rel_b)[mb], np.asarray(rel_r)[mr],
                                rtol=1e-5, atol=1e-4)
 
 
@@ -57,9 +145,21 @@ def test_pair_cost_matches_oracle(e, dtype):
     cnt_j = jnp.asarray(cnt).astype(dtype)
     pi_j = jnp.asarray(pi).astype(dtype)
     cbar, log2v = jnp.float32(45.0), jnp.float32(14.0)
-    got = kops.pair_cost(cnt_j, pi_j, cbar, log2v, use_pallas=True,
-                         interpret=True)
+    got = kops.pair_cost(cnt_j, pi_j, cbar, log2v,
+                         backend="pallas-interpret")
     want = ref.pair_cost_ref(cnt_j, pi_j, cbar, log2v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_pair_cost_all_backends_agree(backend):
+    rng = np.random.default_rng(42)
+    cnt = jnp.asarray(rng.poisson(1.0, size=512).astype(np.float32))
+    pi = cnt + jnp.asarray(rng.integers(0, 30, size=512).astype(np.float32))
+    cbar, log2v = jnp.float32(45.0), jnp.float32(14.0)
+    want = ref.pair_cost_ref(cnt, pi, cbar, log2v)
+    got = kops.pair_cost(cnt, pi, cbar, log2v, backend=backend)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-4)
 
@@ -68,7 +168,7 @@ def test_merge_gain_symmetry():
     """Reduction(A,B) must equal Reduction(B,A) (unordered merges)."""
     args = _operands(2, 8, 16, seed=7)
     rel, red = kops.merge_gain(*args, jnp.float32(60.0), jnp.float32(20.0),
-                               use_pallas=True, interpret=True)
+                               backend="pallas-interpret")
     red = np.asarray(red)
     np.testing.assert_allclose(red, np.swapaxes(red, 1, 2), rtol=1e-5,
                                atol=1e-3)
@@ -77,6 +177,6 @@ def test_merge_gain_symmetry():
 def test_merge_gain_self_pairs_invalid():
     args = _operands(1, 6, 8, seed=3)
     rel, _ = kops.merge_gain(*args, jnp.float32(60.0), jnp.float32(20.0),
-                             use_pallas=True, interpret=True)
+                             backend="pallas-interpret")
     diag = np.einsum("gcc->gc", np.asarray(rel))
     assert np.all(np.isneginf(diag))

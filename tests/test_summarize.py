@@ -78,3 +78,18 @@ def test_history_records_progress():
     assert len(res.history) >= 1
     sizes = [h["size_bits"] for h in res.history]
     assert sizes == sorted(sizes, reverse=True)  # monotone shrinking
+
+
+def test_history_total_reduction_positive():
+    """Rounds that accept merges must report the summed Eq. 20 reduction
+    of the accepted pairs — positive bits, not a dead-zero stat."""
+    src, dst, v = small_graph()
+    res = summarize(src, dst, v, SummaryConfig(T=6, k_frac=0.25, seed=2))
+    merging = [h for h in res.history if h["nmerges"] > 0]
+    assert merging, "fixture never merged — can't exercise total_reduction"
+    for h in merging:
+        assert h["total_reduction"] > 0.0, h
+    # and rounds with no merges reduce nothing
+    for h in res.history:
+        if h["nmerges"] == 0:
+            assert h["total_reduction"] == 0.0, h
