@@ -1,0 +1,137 @@
+"""Measure checkpoint/resume overhead (EXPERIMENTS.md §Resume).
+
+    PYTHONPATH=src python scripts/measure_resume.py \
+        --dataset dblp --scale 0.2 --T 12 --driver-chunk 1
+
+Times three things against one workload:
+
+  1. a plain run (no checkpointing) — the baseline wall;
+  2. the same run saving at every chunk boundary — per-save driver stall
+     (the synchronous device→host snapshot), background write wall and
+     committed bytes from ``CheckpointManager.save_stats``, and the total
+     wall delta;
+  3. a restore + resume from the *first* committed step — restore latency
+     (fingerprint check + leaf loads + device_put) and the resumed wall.
+
+Prints one JSON record; ``--distributed`` measures the edge-sharded
+backend over every local device instead of the single-device path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="dblp")
+    ap.add_argument("--edge-list", default=None)
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--k-frac", type=float, default=0.3)
+    ap.add_argument("--T", type=int, default=12)
+    ap.add_argument("--driver-chunk", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core import SummaryConfig
+    from repro.core.engine import EngineCheckpointer, SummaryEngine
+    from repro.graphs import load_graph
+    from repro.runtime import CheckpointManager
+
+    g = load_graph(args.edge_list or args.dataset, scale=args.scale,
+                   seed=args.seed)
+    src, dst, v = np.asarray(g.src), np.asarray(g.dst), g.num_nodes
+    cfg = SummaryConfig(T=args.T, k_frac=args.k_frac, seed=args.seed,
+                        driver_chunk=args.driver_chunk)
+
+    if args.distributed:
+        from repro.core.distributed import make_distributed_backend
+        from repro.core.types import make_graph
+        from repro.graphs.feed import shard_edges, shard_edges_from_cache
+        from repro.runtime import make_mesh_from_plan, plan_mesh
+
+        mesh = make_mesh_from_plan(
+            plan_mesh(jax.device_count(), global_batch=1, want_model=1))
+        if g.cache_dir is not None:
+            shards = shard_edges_from_cache(g.cache_dir, mesh)
+        else:
+            graph, _ = make_graph(src, dst, v)
+            shards = shard_edges(np.asarray(graph.src),
+                                 np.asarray(graph.dst), mesh)
+        backend = make_distributed_backend(
+            mesh, cfg, v, shards.num_edges, grouping="compact",
+            capacity_factor=32.0, lean_sort=True).bind(shards.src,
+                                                       shards.dst)
+        mode = f"distributed{dict(mesh.shape)}"
+    else:
+        from repro.core.engine import LocalBackend
+
+        backend = LocalBackend(src, dst, v, cfg)
+        mode = "local"
+
+    def run(**kw):
+        t0 = time.perf_counter()
+        out = SummaryEngine(backend).run(collect_history=False, **kw)
+        return out, time.perf_counter() - t0
+
+    _, warm = run()  # compile
+    _, wall_plain = run()
+
+    d = tempfile.mkdtemp(prefix="measure_resume_")
+    try:
+        ck = EngineCheckpointer(manager=CheckpointManager(d, keep=1000),
+                                every=1)
+        full, wall_ckpt = run(checkpointer=ck)
+        stats = sorted(ck.manager.save_stats.items())
+        snaps = [s["snapshot_wall_s"] for _, s in stats
+                 if s["snapshot_wall_s"] is not None]
+        writes = [s["write_wall_s"] for _, s in stats
+                  if s["write_wall_s"] is not None]
+        byts = [s["bytes"] for _, s in stats if s["bytes"]]
+
+        steps = ck.manager.all_steps()
+        for s in steps[1:]:
+            shutil.rmtree(f"{d}/step_{s:010d}")
+        ck2 = EngineCheckpointer(manager=CheckpointManager(d, keep=1000),
+                                 every=1)
+        t0 = time.perf_counter()
+        restored = ck2.restore(backend)
+        restore_wall = time.perf_counter() - t0
+        res, wall_resumed = run(checkpointer=ck2, resume=True)
+        assert restored is not None and res.resumed_from == steps[0]
+        assert float(res.finalize["stats" if args.distributed else "after"]
+                     ["size_bits"]) == \
+            float(full.finalize["stats" if args.distributed else "after"]
+                  ["size_bits"])
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    print(json.dumps({
+        "mode": mode, "V": v, "E": int(len(src)),
+        "dataset": args.edge_list or args.dataset,
+        "rounds": full.iterations_run,
+        "saves": full.checkpoint_saves,
+        "wall_plain_s": wall_plain,
+        "wall_checkpointed_s": wall_ckpt,
+        "overhead_frac": wall_ckpt / wall_plain - 1.0,
+        "snapshot_mean_ms": 1e3 * float(np.mean(snaps)),
+        "snapshot_total_ms": 1e3 * float(np.sum(snaps)),
+        "write_mean_ms": 1e3 * float(np.mean(writes)),
+        "checkpoint_bytes": int(np.max(byts)) if byts else 0,
+        "restore_wall_ms": 1e3 * restore_wall,
+        "wall_resumed_s": wall_resumed,
+        "resumed_from_step": steps[0],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

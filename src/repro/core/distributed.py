@@ -276,6 +276,15 @@ class DistributedBackend:
     def num_supernodes(self, state) -> int:
         return int(jnp.sum(state.size > 0))
 
+    def state_sharding(self):
+        """Replicated placement on *this* mesh — restoring a checkpoint
+        written on a different device count resolves here (DESIGN.md §13:
+        reshard-on-load, no resharding pass)."""
+        from jax.sharding import NamedSharding
+
+        return NamedSharding(self.mesh,
+                             make_rules(self.mesh, "summarize").replicated)
+
     def sparsify_finalize(self, state, k_bits, salt) -> dict:
         src_p, dst_p = self._shards()
         with self.mesh:

@@ -35,10 +35,22 @@ def summarize(
     num_nodes: int,
     cfg: SummaryConfig = SummaryConfig(),
     collect_history: bool = True,
+    *,
+    checkpointer=None,
+    monitor=None,
+    resume: bool = False,
 ) -> SummaryResult:
-    """Run SSumM on an edge list. Returns the summary graph + exact metrics."""
+    """Run SSumM on an edge list. Returns the summary graph + exact metrics.
+
+    ``checkpointer`` (a :class:`repro.core.engine.EngineCheckpointer`),
+    ``monitor`` (a :class:`repro.runtime.straggler.StragglerMonitor`), and
+    ``resume`` pass straight through to :meth:`SummaryEngine.run` — the
+    crash-safe/preemption-safe path of DESIGN.md §13.
+    """
     backend = LocalBackend(src, dst, num_nodes, cfg)
-    run = SummaryEngine(backend).run(collect_history=collect_history)
+    run = SummaryEngine(backend).run(collect_history=collect_history,
+                                     checkpointer=checkpointer,
+                                     monitor=monitor, resume=resume)
 
     pt = run.finalize["pair_table"]
     after = run.finalize["after"]
@@ -61,4 +73,9 @@ def summarize(
         mdl_cost=float(after["mdl_cost"]),
         iterations_run=run.iterations_run,
         history=run.history,
+        chunk_wall_s=run.chunk_wall_s,
+        straggler_events=run.straggler_events,
+        resumed_from=run.resumed_from,
+        checkpoint_saves=run.checkpoint_saves,
+        checkpoint_snapshot_wall_s=run.checkpoint_snapshot_wall_s,
     )

@@ -142,6 +142,13 @@ class SummaryResult:
     mdl_cost: float  # Eq. (14)
     iterations_run: int
     history: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    # fault-tolerance / observability bookkeeping (engine pass-through;
+    # DESIGN.md §13) — empty/zero when the run was plain and uninterrupted
+    chunk_wall_s: list = dataclasses.field(default_factory=list)
+    straggler_events: list = dataclasses.field(default_factory=list)
+    resumed_from: int | None = None
+    checkpoint_saves: int = 0
+    checkpoint_snapshot_wall_s: float = 0.0
 
 
 def make_graph(src, dst, num_nodes: int) -> tuple[Graph, int]:

@@ -418,11 +418,48 @@ def ingest_edge_list(path: str, cache_dir: str | None = None,
     return cache_dir
 
 
+def _member_is_intact(path: str, dtype: np.dtype, shape: tuple) -> bool:
+    """True iff ``path`` is a complete ``.npy`` of exactly dtype/shape.
+
+    Reads only the npy header (a few hundred bytes), then checks the file
+    size equals header + payload — a blob truncated by a crashed or killed
+    writer is caught here without paging in any data."""
+    readers = {(1, 0): np.lib.format.read_array_header_1_0,
+               (2, 0): np.lib.format.read_array_header_2_0}
+    try:
+        with open(path, "rb") as f:
+            version = np.lib.format.read_magic(f)
+            reader = readers.get(tuple(version))
+            if reader is None:
+                return False
+            got_shape, fortran, got_dtype = reader(f)
+            data_start = f.tell()
+    except (OSError, ValueError):
+        return False
+    if fortran or got_dtype != dtype or tuple(got_shape) != tuple(shape):
+        return False
+    expect = data_start + int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return os.path.getsize(path) == expect
+
+
+def _expected_members(meta: dict) -> dict[str, tuple[np.dtype, tuple]]:
+    """dtype/shape of every cache member, derived from meta.json counts."""
+    v, e = int(meta["num_nodes"]), int(meta["num_edges"])
+    return {
+        "src.npy": (np.dtype(np.int32), (e,)),
+        "dst.npy": (np.dtype(np.int32), (e,)),
+        "indptr.npy": (np.dtype(np.int64), (v + 1,)),
+        "indices.npy": (np.dtype(np.int32), (2 * e,)),
+    }
+
+
 def cache_is_fresh(cache_dir: str, source_path: str | None = None) -> bool:
     """A cache is fresh iff meta.json parses, matches the source stamp,
-    and **all four** ``.npy`` members exist — a directory that lost a
-    member (mid-write crash, partial deletion) must fall through to
-    re-ingestion instead of raising at ``np.load`` time."""
+    and **all four** ``.npy`` members are intact — present, with the
+    dtype/shape meta.json implies, and byte-complete on disk. A directory
+    that lost a member or holds a truncated blob (mid-write crash, partial
+    copy, disk-full) must fall through to re-ingestion instead of raising
+    (or worse, mmap-ing zeros) at ``np.load`` time."""
     meta_path = os.path.join(cache_dir, "meta.json")
     if not os.path.exists(meta_path):
         return False
@@ -433,9 +470,15 @@ def cache_is_fresh(cache_dir: str, source_path: str | None = None) -> bool:
         return False
     if meta.get("version") != CACHE_VERSION:
         return False
-    if any(not os.path.exists(os.path.join(cache_dir, m))
-           for m in CACHE_MEMBERS):
+    try:
+        expected = _expected_members(meta)
+    except (KeyError, TypeError, ValueError):
         return False
+    assert set(expected) == set(CACHE_MEMBERS)
+    for member, (dtype, shape) in expected.items():
+        if not _member_is_intact(os.path.join(cache_dir, member),
+                                 dtype, shape):
+            return False
     if source_path is not None and os.path.exists(source_path):
         if meta.get("source") != _file_stamp(source_path):
             return False

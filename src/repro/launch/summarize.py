@@ -25,7 +25,9 @@ runs the 1.1M-edge fixture under it).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import sys
 import time
 
 import jax
@@ -33,11 +35,19 @@ import numpy as np
 
 from repro.core import SummaryConfig, summarize
 from repro.core.distributed import make_distributed_backend
-from repro.core.engine import SummaryEngine
+from repro.core.engine import EngineCheckpointer, SummaryEngine
 from repro.core.types import make_graph
 from repro.graphs import DATASETS, load_graph
 from repro.graphs.feed import EdgeShards, shard_edges, shard_edges_from_cache
-from repro.runtime import make_mesh_from_plan, plan_mesh
+from repro.runtime import (
+    RESUMABLE_EXIT,
+    CheckpointManager,
+    Preempted,
+    PreemptionGuard,
+    StragglerMonitor,
+    make_mesh_from_plan,
+    plan_mesh,
+)
 
 
 def build_distributed_pipeline(mesh, cfg: SummaryConfig, num_nodes: int,
@@ -56,7 +66,8 @@ def build_distributed_pipeline(mesh, cfg: SummaryConfig, num_nodes: int,
 
 
 def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
-                    shards: EdgeShards | None = None):
+                    shards: EdgeShards | None = None, *,
+                    checkpointer=None, monitor=None, resume: bool = False):
     """Merge rounds + final sparsification, all edge-sharded over ``mesh``.
 
     Eq.(2)/(4) metrics come out of the psum'd reductions of the sparsify
@@ -76,6 +87,11 @@ def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
     run per dispatch inside the shard_map body, and the Sect. 3.2.4
     drop-to-k tail (distributed ξ-th order statistic, DESIGN.md §7) is the
     backend's finalize.
+
+    ``checkpointer``/``monitor``/``resume`` pass through to the engine
+    (DESIGN.md §13); the fault-tolerance bookkeeping rides along inside the
+    stats dict (``chunk_wall_s``, ``straggler_events``, ``resumed_from``,
+    ``checkpoint_*``).
     """
     if shards is None:
         graph, _ = make_graph(src, dst, v)
@@ -92,11 +108,19 @@ def run_distributed(src, dst, v, cfg: SummaryConfig, mesh, pipeline=None,
     if pipeline is None:
         pipeline = build_distributed_pipeline(mesh, cfg, v, e)
     backend = pipeline.bind(shards.src, shards.dst)
-    run = SummaryEngine(backend).run(collect_history=False)
+    run = SummaryEngine(backend).run(collect_history=False,
+                                     checkpointer=checkpointer,
+                                     monitor=monitor, resume=resume)
     out = {k: float(x) for k, x in (run.last_stats or {}).items()}
     sp_stats = {k: float(x) for k, x in run.finalize["stats"].items()}
     sp_stats["sparsify_wall_s"] = run.sparsify_wall_s
     out.update(sp_stats)
+    out["chunk_wall_s"] = run.chunk_wall_s
+    out["straggler_events"] = [dataclasses.asdict(ev)
+                               for ev in run.straggler_events]
+    out["resumed_from"] = run.resumed_from
+    out["checkpoint_saves"] = run.checkpoint_saves
+    out["checkpoint_snapshot_wall_s"] = run.checkpoint_snapshot_wall_s
     return run.state, out, run.input_size_bits
 
 
@@ -133,8 +157,28 @@ def main(argv=None) -> dict:
     ap.add_argument("--rss-budget-mb", type=float, default=None,
                     help="fail (exit 1) if the process peak RSS exceeds "
                          "this many MB — the CI out-of-core gate")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="save resumable Alg. 1 state here at chunk "
+                         "boundaries (async, atomic, keep-N); SIGTERM/"
+                         f"SIGINT then save-and-exit {RESUMABLE_EXIT}")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="save cadence in completed merge rounds, aligned "
+                         "up to chunk boundaries (<=0: only the final and "
+                         "preemption saves)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="committed checkpoints retained (keep-N GC)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest committed checkpoint in "
+                         "--checkpoint-dir (bit-identical to an "
+                         "uninterrupted run; re-plans the mesh for the "
+                         "current device count)")
+    ap.add_argument("--driver-chunk", type=int, default=None,
+                    help="merge rounds per device dispatch (default: "
+                         "SummaryConfig.driver_chunk)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     t_load = time.time()
     g = load_graph(args.edge_list or args.dataset,
@@ -142,8 +186,26 @@ def main(argv=None) -> dict:
                    scale=args.scale, seed=args.seed)
     load_wall_s = time.time() - t_load
     src, dst, v = np.asarray(g.src), np.asarray(g.dst), g.num_nodes
+    cfg_kw = {} if args.driver_chunk is None else \
+        {"driver_chunk": args.driver_chunk}
     cfg = SummaryConfig(T=args.T, k_frac=args.k_frac,
-                        group_size=args.group_size, seed=args.seed)
+                        group_size=args.group_size, seed=args.seed, **cfg_kw)
+
+    # fault tolerance (DESIGN.md §13): cooperative preemption + chunk-
+    # boundary checkpoints; straggler monitor always on (host-side, free)
+    monitor = StragglerMonitor()
+    monitor.on_straggler(lambda ev: print(
+        f"[straggler] dispatch t0={ev.step}: {ev.step_time:.3f}s "
+        f"({ev.ratio:.1f}x the {ev.mean:.3f}s EMA)", file=sys.stderr))
+    ckp = None
+    if args.checkpoint_dir:
+        ckp = EngineCheckpointer(
+            manager=CheckpointManager(args.checkpoint_dir,
+                                      keep=args.checkpoint_keep),
+            every=args.checkpoint_every,
+            guard=PreemptionGuard(),
+            graph_extra={"dataset": args.edge_list or args.dataset},
+        )
     ingest = {
         "source": g.source,
         "load_wall_s": load_wall_s,
@@ -153,56 +215,90 @@ def main(argv=None) -> dict:
         "ingest_self_loops_dropped": g.stats.self_loops_dropped,
     }
     t0 = time.time()
-    if args.distributed:
-        plan = plan_mesh(jax.device_count(), global_batch=1, want_model=1)
-        mesh = make_mesh_from_plan(plan)
-        # out-of-core feed: a graph backed by a CSR cache goes straight
-        # from the mmap'd columns to per-device shards (DESIGN.md §11);
-        # only synthetic stand-ins take the in-memory fallback
-        t_feed = time.time()
-        if g.cache_dir is not None:
-            shards = shard_edges_from_cache(g.cache_dir, mesh)
+    try:
+        if args.distributed:
+            # elastic re-mesh: the plan always reflects the *current*
+            # device count — a resume after device loss lands on the
+            # survivor mesh, the replicated state is reshard-on-load, and
+            # the edge shards are re-fed below from the mmap cache
+            # (DESIGN.md §13); no resharding pass anywhere
+            plan = plan_mesh(jax.device_count(), global_batch=1,
+                             want_model=1)
+            mesh = make_mesh_from_plan(plan)
+            # out-of-core feed: a graph backed by a CSR cache goes straight
+            # from the mmap'd columns to per-device shards (DESIGN.md §11);
+            # only synthetic stand-ins take the in-memory fallback
+            t_feed = time.time()
+            if g.cache_dir is not None:
+                shards = shard_edges_from_cache(g.cache_dir, mesh)
+            else:
+                graph, _ = make_graph(src, dst, v)
+                shards = shard_edges(np.asarray(graph.src),
+                                     np.asarray(graph.dst), mesh)
+            feed_wall_s = time.time() - t_feed
+            _state, stats, size_g = run_distributed(
+                None, None, v, cfg, mesh, shards=shards,
+                checkpointer=ckp, monitor=monitor, resume=args.resume)
+            fs = shards.stats
+            result = {
+                "dataset": args.edge_list or args.dataset, "V": v,
+                "E": len(src),
+                "mode": f"distributed{dict(mesh.shape)}",
+                "size_bits": stats["size_bits"],
+                "size_bits_before_sparsify": stats["size_bits_before"],
+                "relative_size": stats["size_bits"] / size_g,
+                "re1": stats["re1"], "re2": stats["re2"],
+                "num_supernodes": stats["num_supernodes"],
+                "num_superedges": stats["num_superedges"],
+                "superedges_dropped": stats["dropped"],
+                "sparsify_wall_s": stats["sparsify_wall_s"],
+                "feed_wall_s": feed_wall_s,
+                "feed_path": fs.path,
+                "feed_shard_rows": fs.shard_rows,
+                "feed_shard_bytes": fs.shard_bytes,
+                "feed_peak_staging_bytes": fs.peak_staging_bytes,
+                "feed_bytes_copied": fs.bytes_copied,
+                "chunk_wall_s": stats["chunk_wall_s"],
+                "straggler_events": stats["straggler_events"],
+                "resumed_from": stats["resumed_from"],
+                "checkpoint_saves": stats["checkpoint_saves"],
+                "checkpoint_snapshot_wall_s":
+                    stats["checkpoint_snapshot_wall_s"],
+                "wall_s": time.time() - t0,
+            }
         else:
-            graph, _ = make_graph(src, dst, v)
-            shards = shard_edges(np.asarray(graph.src),
-                                 np.asarray(graph.dst), mesh)
-        feed_wall_s = time.time() - t_feed
-        _state, stats, size_g = run_distributed(None, None, v, cfg, mesh,
-                                                shards=shards)
-        fs = shards.stats
-        result = {
-            "dataset": args.edge_list or args.dataset, "V": v, "E": len(src),
-            "mode": f"distributed{dict(mesh.shape)}",
-            "size_bits": stats["size_bits"],
-            "size_bits_before_sparsify": stats["size_bits_before"],
-            "relative_size": stats["size_bits"] / size_g,
-            "re1": stats["re1"], "re2": stats["re2"],
-            "num_supernodes": stats["num_supernodes"],
-            "num_superedges": stats["num_superedges"],
-            "superedges_dropped": stats["dropped"],
-            "sparsify_wall_s": stats["sparsify_wall_s"],
-            "feed_wall_s": feed_wall_s,
-            "feed_path": fs.path,
-            "feed_shard_rows": fs.shard_rows,
-            "feed_shard_bytes": fs.shard_bytes,
-            "feed_peak_staging_bytes": fs.peak_staging_bytes,
-            "feed_bytes_copied": fs.bytes_copied,
-            "wall_s": time.time() - t0,
-        }
-    else:
-        res = summarize(src, dst, v, cfg)
-        result = {
-            "dataset": args.edge_list or args.dataset, "V": v, "E": len(src),
-            "mode": "local",
-            "size_bits": res.size_bits,
-            "relative_size": res.size_bits / res.input_size_bits,
-            "re1": res.re1, "re2": res.re2,
-            "num_supernodes": res.num_supernodes,
-            "num_superedges": res.num_superedges,
-            "iterations": res.iterations_run,
-            "wall_s": time.time() - t0,
-        }
+            res = summarize(src, dst, v, cfg, checkpointer=ckp,
+                            monitor=monitor, resume=args.resume)
+            result = {
+                "dataset": args.edge_list or args.dataset, "V": v,
+                "E": len(src),
+                "mode": "local",
+                "size_bits": res.size_bits,
+                "relative_size": res.size_bits / res.input_size_bits,
+                "re1": res.re1, "re2": res.re2,
+                "num_supernodes": res.num_supernodes,
+                "num_superedges": res.num_superedges,
+                "iterations": res.iterations_run,
+                "chunk_wall_s": res.chunk_wall_s,
+                "straggler_events": [dataclasses.asdict(ev)
+                                     for ev in res.straggler_events],
+                "resumed_from": res.resumed_from,
+                "checkpoint_saves": res.checkpoint_saves,
+                "checkpoint_snapshot_wall_s":
+                    res.checkpoint_snapshot_wall_s,
+                "wall_s": time.time() - t0,
+            }
+    except Preempted as p:
+        # save-and-exit: the committed checkpoint is the resume point;
+        # RESUMABLE_EXIT tells the supervisor "rerun me with --resume"
+        print(json.dumps(dict(
+            ingest, preempted=True, checkpoint_step=p.step,
+            checkpoint_dir=args.checkpoint_dir,
+            wall_s=time.time() - t0), indent=1))
+        raise SystemExit(RESUMABLE_EXIT)
     result.update(ingest)
+    if ckp is not None:
+        result["checkpoint_dir"] = args.checkpoint_dir
     result["peak_rss_mb"] = peak_rss_mb()
     print(json.dumps(result, indent=1))
     if (args.rss_budget_mb is not None and result["peak_rss_mb"] is not None

@@ -1,11 +1,20 @@
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.elastic import MeshPlan, PreemptionGuard, make_mesh_from_plan, plan_mesh
+from repro.runtime.elastic import (
+    RESUMABLE_EXIT,
+    MeshPlan,
+    Preempted,
+    PreemptionGuard,
+    make_mesh_from_plan,
+    plan_mesh,
+)
 from repro.runtime.straggler import StragglerEvent, StragglerMonitor
 
 __all__ = [
     "CheckpointManager",
     "MeshPlan",
+    "Preempted",
     "PreemptionGuard",
+    "RESUMABLE_EXIT",
     "make_mesh_from_plan",
     "plan_mesh",
     "StragglerEvent",

@@ -30,6 +30,7 @@ import os
 import queue
 import shutil
 import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -66,19 +67,23 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._q: queue.Queue = queue.Queue()
         self._err: list[BaseException] = []
+        # per-step accounting: {"snapshot_wall_s", "write_wall_s", "bytes"}
+        # — snapshot time is what the driver loop actually pays for an
+        # async save; write time and bytes happen off-thread
+        self.save_stats: dict[int, dict] = {}
         self._thread = threading.Thread(target=self._writer, daemon=True)
         self._thread.start()
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, extra: dict | None = None) -> None:
         """Synchronous save (snapshot + write + commit on caller thread)."""
-        snap = self._snapshot(tree)
+        snap = self._snapshot_timed(step, tree)
         self._write(step, snap, extra or {})
 
     def save_async(self, step: int, tree, extra: dict | None = None) -> None:
         """Snapshot now, serialize in the background (1-step decoupled)."""
         self._raise_pending()
-        snap = self._snapshot(tree)
+        snap = self._snapshot_timed(step, tree)
         self._q.put((step, snap, extra or {}))
 
     def wait(self) -> None:
@@ -90,6 +95,16 @@ class CheckpointManager:
         flat = _flatten(tree)
         # one device_get per leaf; sharded arrays gather to host here
         return {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _snapshot_timed(self, step: int, tree) -> dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        snap = self._snapshot(tree)
+        self.save_stats[step] = {
+            "snapshot_wall_s": time.perf_counter() - t0,
+            "write_wall_s": None,
+            "bytes": None,
+        }
+        return snap
 
     def _writer(self) -> None:
         while True:
@@ -106,6 +121,7 @@ class CheckpointManager:
             raise self._err.pop(0)
 
     def _write(self, step: int, snap: dict[str, np.ndarray], extra: dict) -> None:
+        t0 = time.perf_counter()
         tmp = os.path.join(self.dir, f".tmp-{step}")
         final = os.path.join(self.dir, f"step_{step:010d}")
         if os.path.exists(tmp):
@@ -131,7 +147,18 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        st = self.save_stats.setdefault(step, {"snapshot_wall_s": None})
+        st["write_wall_s"] = time.perf_counter() - t0
+        st["bytes"] = self.step_bytes(step)
         self._gc()
+
+    def step_bytes(self, step: int) -> int:
+        """On-disk size of a committed step (0 if absent/uncommitted)."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        if not os.path.exists(os.path.join(d, COMMIT)):
+            return 0
+        return sum(os.path.getsize(os.path.join(d, f))
+                   for f in os.listdir(d))
 
     def _gc(self) -> None:
         steps = self.all_steps()

@@ -9,17 +9,41 @@ up any remainder — see dist/microbatch.py).
 
 ``PreemptionGuard`` turns SIGTERM/SIGINT into a cooperative "save and exit"
 flag that the train loop polls once per step — the checkpoint manager's
-atomic commit makes the save safe even if the grace period expires.
+atomic commit makes the save safe even if the grace period expires. A
+*second* signal means the grace period is over: the handler hard-exits
+immediately (``os._exit``) with the conventional ``128 + signum`` status,
+leaving at worst an ignored ``.tmp-`` directory behind.
+
+Drivers that saved a committed checkpoint before exiting raise
+:class:`Preempted` and exit with :data:`RESUMABLE_EXIT` (BSD
+``EX_TEMPFAIL``) — a nonzero status that supervisors can distinguish from
+a crash: rerun the same command with ``--resume``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
 
 import numpy as np
 
 from repro.dist.compat import make_mesh
+
+#: exit status of a run that checkpointed and stopped on SIGTERM/SIGINT —
+#: nonzero (the work is unfinished) but *resumable* (EX_TEMPFAIL).
+RESUMABLE_EXIT = 75
+
+
+class Preempted(RuntimeError):
+    """Raised at a host-sync point after a committed save-on-signal.
+
+    ``step`` is the checkpoint step the run is resumable from.
+    """
+
+    def __init__(self, step: int):
+        super().__init__(f"preempted; resumable from checkpoint step {step}")
+        self.step = step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,10 +106,22 @@ def make_mesh_from_plan(plan: MeshPlan):
 
 
 class PreemptionGuard:
-    """Cooperative SIGTERM/SIGINT → checkpoint-and-exit flag."""
+    """Cooperative SIGTERM/SIGINT → checkpoint-and-exit flag.
 
-    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+    First signal: set :attr:`preempted`; the loop observes it at its next
+    host-sync point, saves, and exits :data:`RESUMABLE_EXIT`. Second
+    signal (the sender insists): hard-exit *from the handler* with
+    ``hard_exit_code`` (default ``128 + signum``, the shell convention for
+    death-by-signal) — no save is attempted, the previous commit is the
+    resume point, and any half-written ``.tmp-`` directory is ignored on
+    restore and garbage-collected by the next save.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT),
+                 hard_exit_code: int | None = None):
         self._requested = False
+        self._count = 0
+        self._hard_exit_code = hard_exit_code
         self._prev = {}
         for s in signals:
             try:
@@ -94,11 +130,19 @@ class PreemptionGuard:
                 pass
 
     def _handler(self, signum, frame):
+        self._count += 1
+        if self._count >= 2:
+            code = self._hard_exit_code
+            os._exit(128 + signum if code is None else code)
         self._requested = True
 
     @property
     def preempted(self) -> bool:
         return self._requested
+
+    @property
+    def signal_count(self) -> int:
+        return self._count
 
     def restore(self) -> None:
         for s, h in self._prev.items():

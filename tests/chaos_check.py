@@ -1,0 +1,323 @@
+"""Chaos-injection harness: kill the real launcher at seeded checkpoint
+steps, resume, and assert launcher-JSON bit-identity with an uninterrupted
+golden run.
+
+    PYTHONPATH=src python tests/chaos_check.py \
+        --edge-list data/rmat_1m.txt.gz --T 15 --driver-chunk 1 \
+        --distributed --devices 8 \
+        --kill TERM:2 --kill KILL:5 --out chaos_report.json
+
+Per ``--kill SIG:STEP`` scenario, the harness launches
+``repro.launch.summarize`` with ``--checkpoint-dir``, SIGSTOP-samples the
+child until checkpoint ``STEP`` is committed (freeze → inspect → decide,
+so the kill lands at a known boundary instead of racing the round loop),
+delivers the signal, then reruns the identical command with ``--resume``
+— on ``--resume-devices`` survivors when testing the elastic 8→N shrink.
+
+Outcome contract per signal:
+
+  TERM — cooperative: the launcher saves at the next host-sync point,
+         prints ``{"preempted": true, ...}``, exits ``RESUMABLE_EXIT``
+         (75). If the signal lands after the last sync point the run just
+         finishes (rc 0) — recorded as ``completed`` and compared to the
+         golden directly.
+  KILL — no grace: the process dies with ``-SIGKILL``; the latest
+         *committed* checkpoint is the resume point and any ``.tmp-``
+         half-write is ignored.
+
+Comparison: every metric key the launcher prints must equal the golden
+**bit-for-bit** (same device count). Across a device shrink the merge
+trajectory is still identical (integer state, exact pair aggregation) so
+counts stay exact, but the psum partial-sum grouping of the RE reductions
+is mesh-shaped — those keys are compared against a same-device-count
+golden exactly and against the original-mesh golden to 1e-6.
+
+The harness never imports jax — each launcher subprocess owns its device
+topology via XLA_FLAGS.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESUMABLE_EXIT = 75  # repro.runtime.RESUMABLE_EXIT (harness is jax-free)
+
+#: launcher JSON keys that must be bit-identical on the same device count
+EXACT_KEYS = ("V", "E", "size_bits", "size_bits_before_sparsify",
+              "relative_size", "re1", "re2", "num_supernodes",
+              "num_superedges", "superedges_dropped", "iterations")
+#: keys exact across a device shrink too (mesh-independent integers)
+CROSS_MESH_EXACT = ("V", "E", "num_supernodes", "num_superedges",
+                    "superedges_dropped", "iterations")
+#: float keys compared to tolerance across a shrink (psum grouping)
+CROSS_MESH_APPROX = ("size_bits", "size_bits_before_sparsify",
+                     "relative_size", "re1", "re2")
+
+
+def launcher_cmd(args, ckdir=None, resume=False):
+    cmd = [sys.executable, "-m", "repro.launch.summarize",
+           "--k-frac", str(args.k_frac), "--T", str(args.T),
+           "--seed", str(args.seed),
+           "--group-size", str(args.group_size),
+           "--driver-chunk", str(args.driver_chunk)]
+    if args.edge_list:
+        cmd += ["--edge-list", args.edge_list]
+    else:
+        cmd += ["--dataset", args.dataset, "--scale", str(args.scale)]
+    if args.chunk_edges:
+        cmd += ["--chunk-edges", str(args.chunk_edges)]
+    if args.distributed:
+        cmd += ["--distributed"]
+    if ckdir:
+        cmd += ["--checkpoint-dir", ckdir,
+                "--checkpoint-every", str(args.checkpoint_every),
+                "--checkpoint-keep", str(args.checkpoint_keep)]
+    if resume:
+        cmd += ["--resume"]
+    return cmd
+
+
+def env_for(devices):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if devices:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+    else:
+        env.pop("XLA_FLAGS", None)
+    return env
+
+
+def committed_steps(ckdir):
+    if not os.path.isdir(ckdir):
+        return []
+    out = []
+    for name in os.listdir(ckdir):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(ckdir, name, "COMMIT")):
+            out.append(int(name[len("step_"):]))
+    return sorted(out)
+
+
+def checkpoint_bytes(ckdir):
+    """On-disk footprint of the largest committed checkpoint."""
+    best = 0
+    for s in committed_steps(ckdir):
+        d = os.path.join(ckdir, f"step_{s:010d}")
+        best = max(best, sum(os.path.getsize(os.path.join(d, f))
+                             for f in os.listdir(d)))
+    return best
+
+
+def last_json(stdout):
+    for line in reversed(stdout.strip().splitlines()):
+        line = line.strip()
+        if line.endswith("}"):
+            # launcher output is an indented multi-line object; find its
+            # opening line and parse the span
+            text = stdout[: stdout.rindex(line) + len(line)]
+            start = text.rindex("\n{") if "\n{" in text else text.index("{")
+            return json.loads(text[start:])
+    raise ValueError(f"no JSON object in stdout:\n{stdout}")
+
+
+def run_to_completion(cmd, env, timeout):
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"launcher failed rc={out.returncode}\ncmd: {' '.join(cmd)}\n"
+            f"stderr:\n{out.stderr[-4000:]}")
+    return last_json(out.stdout)
+
+
+def kill_at_step(cmd, env, ckdir, step, signame, timeout):
+    """Run ``cmd``; deliver ``signame`` once checkpoint ``step`` commits.
+
+    SIGSTOP-samples the child so "is step N committed while the run is
+    still going" is decided on a frozen process — the only way to miss the
+    window is a commit-to-exit gap shorter than one poll interval.
+    Returns ``(returncode, delivered, stdout, stderr)``.
+    """
+    sig = {"TERM": signal.SIGTERM, "KILL": signal.SIGKILL}[signame]
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    delivered = False
+    deadline = time.time() + timeout
+    try:
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            os.kill(proc.pid, signal.SIGSTOP)
+            try:
+                steps = committed_steps(ckdir)
+                if steps and steps[-1] >= step:
+                    os.kill(proc.pid, sig)
+                    delivered = True
+            finally:
+                if proc.poll() is None and sig != signal.SIGKILL:
+                    os.kill(proc.pid, signal.SIGCONT)
+                elif not delivered and proc.poll() is None:
+                    os.kill(proc.pid, signal.SIGCONT)
+            if delivered:
+                break
+            time.sleep(0.002)
+        out, err = proc.communicate(timeout=timeout)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.communicate()
+    return proc.returncode, delivered, out, err
+
+
+def compare(got, want, exact, approx=(), rtol=1e-6):
+    """Mismatch list (empty = pass); keys absent from both are skipped."""
+    bad = []
+    for k in exact:
+        if k not in want and k not in got:
+            continue
+        if got.get(k) != want.get(k):
+            bad.append(f"{k}: got {got.get(k)!r} want {want.get(k)!r}")
+    for k in approx:
+        if k not in want and k not in got:
+            continue
+        g, w = got.get(k), want.get(k)
+        if g is None or w is None or \
+                abs(g - w) > rtol * max(abs(g), abs(w), 1e-30):
+            bad.append(f"{k} (≈): got {g!r} want {w!r}")
+    return bad
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="fault-injection gate for checkpoint/resume")
+    ap.add_argument("--dataset", default="dblp")
+    ap.add_argument("--edge-list", default=None)
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--k-frac", type=float, default=0.3)
+    ap.add_argument("--T", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--group-size", type=int, default=32)
+    ap.add_argument("--chunk-edges", type=int, default=None)
+    ap.add_argument("--driver-chunk", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--checkpoint-keep", type=int, default=3)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="XLA host-platform device count for every run")
+    ap.add_argument("--resume-devices", type=int, default=None,
+                    help="resume on this many devices instead (elastic "
+                         "shrink); adds a same-count golden for the "
+                         "bit-identity comparison")
+    ap.add_argument("--kill", action="append", default=[],
+                    metavar="SIG:STEP",
+                    help="scenario: deliver SIG (TERM|KILL) once "
+                         "checkpoint STEP is committed (repeatable)")
+    ap.add_argument("--workdir", default=None,
+                    help="scratch dir (default: a fresh temp dir)")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--out", default=None,
+                    help="also write the report JSON here (CI artifact)")
+    args = ap.parse_args()
+    if not args.kill:
+        args.kill = ["TERM:2", "KILL:2"]
+
+    workdir = args.workdir or os.path.join(
+        os.environ.get("TMPDIR", "/tmp"), f"chaos_{os.getpid()}")
+    os.makedirs(workdir, exist_ok=True)
+
+    env = env_for(args.devices)
+    golden = run_to_completion(launcher_cmd(args), env, args.timeout)
+    shrink = args.resume_devices is not None and \
+        args.resume_devices != args.devices
+    golden_shrunk = None
+    if shrink:
+        golden_shrunk = run_to_completion(
+            launcher_cmd(args), env_for(args.resume_devices), args.timeout)
+
+    report = {"ok": True, "golden": golden, "scenarios": [],
+              "checkpoint_bytes": 0}
+    for spec in args.kill:
+        signame, step_s = spec.split(":")
+        step = int(step_s)
+        ckdir = os.path.join(workdir, f"ck_{signame}_{step}")
+        shutil.rmtree(ckdir, ignore_errors=True)
+        scen = {"signal": signame, "kill_step": step, "errors": []}
+        rc, delivered, out, err = kill_at_step(
+            launcher_cmd(args, ckdir=ckdir), env, ckdir, step, signame,
+            args.timeout)
+        scen["kill_rc"] = rc
+        scen["delivered"] = delivered
+        report["checkpoint_bytes"] = max(report["checkpoint_bytes"],
+                                         checkpoint_bytes(ckdir))
+        if not delivered:
+            scen["errors"].append(
+                f"run finished (rc={rc}) before step {step} committed — "
+                f"kill step too late for this workload")
+        elif signame == "KILL":
+            if rc != -signal.SIGKILL:
+                scen["errors"].append(f"SIGKILL rc {rc} != -9")
+        elif rc == 0:
+            # TERM landed after the last sync point; the run completed
+            scen["outcome"] = "completed"
+            scen["errors"].extend(compare(last_json(out), golden,
+                                          EXACT_KEYS))
+        else:
+            if rc != RESUMABLE_EXIT:
+                scen["errors"].append(
+                    f"SIGTERM rc {rc} != {RESUMABLE_EXIT}\n{err[-2000:]}")
+            else:
+                rec = last_json(out)
+                if not rec.get("preempted"):
+                    scen["errors"].append(f"no preempted record: {rec}")
+                scen["preempt_step"] = rec.get("checkpoint_step")
+
+        if delivered and rc != 0 and not scen["errors"]:
+            if not committed_steps(ckdir):
+                scen["errors"].append("no committed checkpoint to resume")
+            else:
+                scen["resume_from"] = committed_steps(ckdir)[-1]
+                r_env = env_for(args.resume_devices) if shrink else env
+                out_r = subprocess.run(
+                    launcher_cmd(args, ckdir=ckdir, resume=True), env=r_env,
+                    capture_output=True, text=True, timeout=args.timeout)
+                if out_r.returncode != 0:
+                    scen["errors"].append(
+                        f"resume rc={out_r.returncode}\n"
+                        f"{out_r.stderr[-4000:]}")
+                else:
+                    resumed = last_json(out_r.stdout)
+                    scen["resumed_from_json"] = resumed.get("resumed_from")
+                    if resumed.get("resumed_from") is None:
+                        scen["errors"].append(
+                            "resumed run did not report resumed_from")
+                    if shrink:
+                        scen["errors"].extend(compare(
+                            resumed, golden_shrunk, EXACT_KEYS))
+                        scen["errors"].extend(compare(
+                            resumed, golden, CROSS_MESH_EXACT,
+                            CROSS_MESH_APPROX))
+                    else:
+                        scen["errors"].extend(compare(resumed, golden,
+                                                      EXACT_KEYS))
+                    scen.setdefault("outcome", "resumed")
+        if scen["errors"]:
+            report["ok"] = False
+        report["scenarios"].append(scen)
+
+    text = json.dumps(report, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    raise SystemExit(0 if report["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

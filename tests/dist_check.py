@@ -168,6 +168,58 @@ def check_engine(backend, cfg, mesh, src_p, dst_p, label):
     return run
 
 
+def check_engine_resume(backend, cfg, src_p, dst_p, golden_run):
+    """Checkpoint at every chunk boundary, truncate to the first committed
+    step, resume — the distributed engine must land bit-identically on the
+    golden (uninterrupted) run's metrics, sparsify payload, and partition,
+    with the restored state resharded through ``state_sharding()``."""
+    import shutil
+    import tempfile
+
+    from repro.core.engine import EngineCheckpointer
+    from repro.runtime import CheckpointManager
+
+    import copy
+
+    # driver_chunk=2 → several mid-run chunk boundaries to save at; the
+    # golden ran chunk=8 (chunking bit-identity is proven above) and
+    # driver_chunk is fingerprint-exempt, so the cross-chunk resume is
+    # itself part of the contract under test
+    bound = copy.copy(backend)
+    bound.cfg = dataclasses.replace(cfg, driver_chunk=2)
+    bound = bound.bind(src_p, dst_p)
+    d = tempfile.mkdtemp(prefix="dist_resume_")
+    try:
+        ck = EngineCheckpointer(manager=CheckpointManager(d, keep=50),
+                                every=1)
+        full = SummaryEngine(bound).run(checkpointer=ck)
+        assert full.checkpoint_saves >= 1, "no distributed saves happened"
+        steps = ck.manager.all_steps()
+        for s in steps[1:]:
+            shutil.rmtree(os.path.join(d, f"step_{s:010d}"))
+
+        ck2 = EngineCheckpointer(manager=CheckpointManager(d, keep=50),
+                                 every=1)
+        run = SummaryEngine(bound).run(checkpointer=ck2, resume=True)
+        assert run.resumed_from == steps[0], (run.resumed_from, steps)
+        assert run.iterations_run == golden_run.iterations_run
+        for k in golden_run.last_stats:
+            assert float(run.last_stats[k]) == \
+                float(golden_run.last_stats[k]), ("resume", k)
+        for k in golden_run.finalize["stats"]:
+            assert float(run.finalize["stats"][k]) == \
+                float(golden_run.finalize["stats"][k]), ("resume final", k)
+        np.testing.assert_array_equal(
+            np.asarray(run.state.node2super),
+            np.asarray(golden_run.state.node2super), err_msg="resume")
+        np.testing.assert_array_equal(
+            np.asarray(run.state.size),
+            np.asarray(golden_run.state.size), err_msg="resume")
+        return steps[0]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def main():
     assert jax.device_count() == 8
     src, dst, v = generate("ego-facebook", seed=0, scale=0.05)
@@ -264,11 +316,15 @@ def main():
                                      ensure_budget=False),
                  mesh, src_p, dst_p, "engine drop-all")
 
+    # ---- checkpoint/resume parity on the 8-device mesh ------------------
+    resumed_step = check_engine_resume(backend, cfg, src_p, dst_p, run8)
+
     print(json.dumps({"ok": True, "merged": merged, "merged_compact": merged_c,
                       "final_size_bits": final,
                       "final_size_bits_compact": final_c,
                       "sparsify_dropped": dropped,
-                      "engine_iterations": run8.iterations_run}))
+                      "engine_iterations": run8.iterations_run,
+                      "resumed_step": resumed_step}))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,104 @@
+"""Subprocess body for preemption-safety tests (run via
+tests/test_preemption.py, never imported by pytest).
+
+Each mode exercises one leg of the PreemptionGuard contract against the
+real engine on a small synthetic graph:
+
+  golden  — uninterrupted run; prints the final metrics JSON.
+  term    — SIGTERM already pending when the run starts: the flag must be
+            observed at the *first* host-sync point, the state saved
+            synchronously, and the process exit ``RESUMABLE_EXIT`` after
+            printing ``{"preempted": true, "step": N}``.
+  int     — same, for SIGINT.
+  double  — two SIGTERMs: the second must hard-exit from the handler with
+            the shell convention ``128 + SIGTERM`` — no save, no
+            traceback, at worst an ignored ``.tmp-`` directory.
+  resume  — continue from the latest committed checkpoint in ``--dir``;
+            prints metrics JSON plus ``resumed_from``. Bit-identity with
+            ``golden`` is asserted by the pytest side.
+
+The self-signal (``os.kill`` on our own pid) makes delivery deterministic:
+no parent/child race over whether the run finished before the signal
+landed. Parent-delivered signals are exercised end-to-end against the real
+launcher by tests/chaos_check.py.
+"""
+
+import argparse
+import json
+import os
+import signal
+import time
+
+import numpy as np
+
+from repro.core import SummaryConfig, summarize
+from repro.core.engine import EngineCheckpointer
+from repro.runtime import (
+    RESUMABLE_EXIT,
+    CheckpointManager,
+    Preempted,
+    PreemptionGuard,
+)
+
+CFG = SummaryConfig(T=8, k_frac=0.2, seed=0, driver_chunk=2)
+
+
+def _problem():
+    rng = np.random.default_rng(0)
+    v, e = 400, 1600
+    return rng.integers(0, v, e), rng.integers(0, v, e), v
+
+
+def _metrics(res) -> dict:
+    return {
+        "size_bits": res.size_bits,
+        "re1": res.re1,
+        "re2": res.re2,
+        "num_supernodes": res.num_supernodes,
+        "num_superedges": res.num_superedges,
+        "iterations_run": res.iterations_run,
+        "node2super_sum": int(np.sum(res.node2super)),
+        "edge_w_sum": int(np.sum(res.edge_w)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("mode",
+                    choices=["golden", "term", "int", "double", "resume"])
+    ap.add_argument("--dir", required=True)
+    args = ap.parse_args()
+    src, dst, v = _problem()
+
+    if args.mode == "golden":
+        print(json.dumps(_metrics(summarize(src, dst, v, CFG))))
+        return
+
+    guard = PreemptionGuard()
+    ck = EngineCheckpointer(
+        manager=CheckpointManager(args.dir, keep=3), every=1, guard=guard)
+
+    if args.mode in ("term", "int"):
+        signum = signal.SIGTERM if args.mode == "term" else signal.SIGINT
+        os.kill(os.getpid(), signum)
+        try:
+            summarize(src, dst, v, CFG, checkpointer=ck)
+        except Preempted as p:
+            print(json.dumps({"preempted": True, "step": p.step}))
+            raise SystemExit(RESUMABLE_EXIT)
+        raise SystemExit("pending signal was never observed at a sync point")
+
+    if args.mode == "double":
+        os.kill(os.getpid(), signal.SIGTERM)
+        time.sleep(0.2)  # first handler sets the cooperative flag
+        os.kill(os.getpid(), signal.SIGTERM)
+        time.sleep(2.0)  # second handler must os._exit before this returns
+        raise SystemExit("second signal did not hard-exit")
+
+    if args.mode == "resume":
+        res = summarize(src, dst, v, CFG, checkpointer=ck, resume=True)
+        print(json.dumps(dict(_metrics(res), resumed_from=res.resumed_from)))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ history-equivalent sync-every-round mode; the distributed analogue lives in
 ``tests/dist_check.py``).
 """
 
+import dataclasses
 import json
 import pathlib
 
@@ -15,8 +16,20 @@ import numpy as np
 import pytest
 
 from repro.core import SummaryConfig, summarize
-from repro.core.engine import LocalBackend, SummaryEngine, theta_schedule_host
+from repro.core.engine import (
+    EngineCheckpointer,
+    FingerprintMismatch,
+    LocalBackend,
+    SummaryEngine,
+    theta_schedule_host,
+)
 from repro.graphs import generate
+from repro.runtime import (
+    CheckpointManager,
+    Preempted,
+    PreemptionGuard,
+    StragglerMonitor,
+)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "engine_local.json"
 
@@ -79,3 +92,156 @@ def test_engine_run_payload_consistent():
         assert run.last_stats[k] == run.history[-1][k]
     assert run.sparsify_wall_s >= 0.0
     assert "after" in run.finalize
+    # one dispatch per chunk, all timed; no checkpointer/monitor → zeros
+    assert len(run.chunk_wall_s) == 1 and run.chunk_wall_s[0] > 0.0
+    assert run.straggler_events == []
+    assert run.resumed_from is None and run.checkpoint_saves == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _ckp(tmp_path, name="ck", **kw):
+    return EngineCheckpointer(
+        manager=CheckpointManager(str(tmp_path / name), keep=kw.pop("keep", 50)),
+        **kw)
+
+
+def _drop_steps_after(mgr, keep_step):
+    import shutil
+
+    for s in mgr.all_steps():
+        if s > keep_step:
+            shutil.rmtree(pathlib.Path(mgr.dir) / f"step_{s:010d}")
+
+
+@pytest.mark.parametrize("resume_chunk", [3, 1, 8])
+def test_local_resume_bit_identical(tmp_path, resume_chunk):
+    """Kill-at-any-chunk-boundary → resume ≡ the uninterrupted run.
+
+    The golden is a plain run; the interrupted run checkpoints every
+    chunk, everything after the *first* committed step is deleted
+    (equivalent to dying right after that boundary), and the resume —
+    even under a different ``driver_chunk`` — must reproduce every final
+    metric and the partition bit-for-bit.
+    """
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=10, k_frac=0.2, seed=0, driver_chunk=3)
+    golden = summarize(src, dst, v, cfg)
+
+    ck = _ckp(tmp_path, every=1)
+    full = summarize(src, dst, v, cfg, checkpointer=ck)
+    assert full.checkpoint_saves >= 2
+    steps = ck.manager.all_steps()
+    assert steps, "no committed checkpoints"
+    _drop_steps_after(ck.manager, steps[0])
+
+    cfg_r = dataclasses.replace(cfg, driver_chunk=resume_chunk)
+    ck2 = _ckp(tmp_path, every=1)
+    res = summarize(src, dst, v, cfg_r, checkpointer=ck2, resume=True)
+    assert res.resumed_from == steps[0]
+    for k in ("size_bits", "input_size_bits", "re1", "re2", "mdl_cost",
+              "num_supernodes", "num_superedges", "iterations_run"):
+        assert getattr(res, k) == getattr(golden, k), k
+    np.testing.assert_array_equal(res.node2super, golden.node2super)
+    np.testing.assert_array_equal(res.super_size, golden.super_size)
+    np.testing.assert_array_equal(res.edge_w, golden.edge_w)
+    # resumed history continues the golden's round numbering seamlessly
+    assert [h["t"] for h in golden.history] == \
+        list(range(1, golden.iterations_run + 1))
+    got_hist = [{k: h[k] for k in HISTORY_KEYS} for h in res.history]
+    want_hist = [{k: h[k] for k in HISTORY_KEYS} for h in golden.history]
+    assert got_hist == want_hist
+
+
+def test_resume_from_final_phase_skips_merging(tmp_path):
+    """A crash inside the sparsify tail resumes straight to finalize."""
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=4, k_frac=0.3, seed=0)
+    golden = summarize(src, dst, v, cfg)
+
+    ck = _ckp(tmp_path, every=0)  # only the merge-done (phase=final) save
+    full = summarize(src, dst, v, cfg, checkpointer=ck)
+    assert full.checkpoint_saves == 1
+    ck2 = _ckp(tmp_path, every=0)
+    res = summarize(src, dst, v, cfg, checkpointer=ck2, resume=True)
+    assert res.resumed_from == golden.iterations_run
+    # no merge rounds re-ran: the only dispatches were... none at all
+    assert res.chunk_wall_s == []
+    assert res.size_bits == golden.size_bits
+    np.testing.assert_array_equal(res.node2super, golden.node2super)
+
+
+def test_resume_fingerprint_gate(tmp_path):
+    """A checkpoint is only resumable under the identical config+graph —
+    except ``driver_chunk``, whose bit-identity across values is proven."""
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=4, k_frac=0.3, seed=0)
+    ck = _ckp(tmp_path, every=1)
+    summarize(src, dst, v, cfg, checkpointer=ck)
+
+    with pytest.raises(FingerprintMismatch, match="config"):
+        summarize(src, dst, v, dataclasses.replace(cfg, group_size=16),
+                  checkpointer=_ckp(tmp_path, every=1), resume=True)
+    with pytest.raises(FingerprintMismatch, match="graph"):
+        summarize(src[:-10], dst[:-10], v,
+                  cfg, checkpointer=_ckp(tmp_path, every=1), resume=True)
+    with pytest.raises(FingerprintMismatch, match="graph"):
+        summarize(src, dst, v, cfg, resume=True,
+                  checkpointer=_ckp(tmp_path, every=1,
+                                    graph_extra={"dataset": "other"}))
+    # driver_chunk is exempt: this must NOT raise
+    res = summarize(src, dst, v, dataclasses.replace(cfg, driver_chunk=1),
+                    checkpointer=_ckp(tmp_path, every=1), resume=True)
+    assert res.resumed_from is not None
+
+
+def test_resume_with_empty_dir_starts_fresh(tmp_path):
+    """``--resume`` against a dir with nothing committed is a cold start,
+    not an error — the idempotent supervisor retry loop depends on it."""
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=3, k_frac=0.3, seed=0)
+    golden = summarize(src, dst, v, cfg)
+    res = summarize(src, dst, v, cfg, checkpointer=_ckp(tmp_path, every=1),
+                    resume=True)
+    assert res.resumed_from is None
+    assert res.size_bits == golden.size_bits
+
+
+def test_resume_requires_checkpointer():
+    src, dst, v, _, _ = _load()
+    backend = LocalBackend(src, dst, v, SummaryConfig(T=2))
+    with pytest.raises(ValueError, match="checkpointer"):
+        SummaryEngine(backend).run(resume=True)
+
+
+def test_preemption_saves_and_raises(tmp_path):
+    """A pending signal is honored at the next host-sync point: the state
+    is saved synchronously and ``Preempted`` carries the committed step."""
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=10, k_frac=0.2, seed=0, driver_chunk=2)
+    guard = PreemptionGuard(signals=())
+    guard._requested = True  # signal already pending before the run
+    ck = _ckp(tmp_path, every=1, guard=guard)
+    with pytest.raises(Preempted) as ei:
+        summarize(src, dst, v, cfg, checkpointer=ck)
+    assert ei.value.step == 2  # first chunk boundary
+    assert ck.manager.latest_step() == 2
+
+    golden = summarize(src, dst, v, cfg)
+    res = summarize(src, dst, v, cfg, checkpointer=_ckp(tmp_path, every=1),
+                    resume=True)
+    assert res.resumed_from == 2
+    assert res.size_bits == golden.size_bits
+    np.testing.assert_array_equal(res.node2super, golden.node2super)
+
+
+def test_straggler_monitor_brackets_dispatches():
+    src, dst, v, _, _ = _load()
+    cfg = SummaryConfig(T=6, k_frac=0.2, seed=0, driver_chunk=2)
+    mon = StragglerMonitor(warmup_steps=1000)  # never flags
+    res = summarize(src, dst, v, cfg, monitor=mon)
+    assert mon.count == len(res.chunk_wall_s) > 0
+    assert res.straggler_events == []

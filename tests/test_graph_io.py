@@ -177,6 +177,38 @@ def test_corrupted_cache_missing_member_reingests(tmp_path):
     assert not cache_is_fresh(g2.cache_dir)
 
 
+def test_corrupted_cache_truncated_member_reingests(tmp_path):
+    """A member *present but short* (disk-full writer, torn copy) must be
+    caught too: mmap-loading a truncated blob either raises later or —
+    worse — silently serves zeros. ``cache_is_fresh`` checks every
+    member's npy header dtype/shape against meta.json and its exact
+    on-disk byte size, so a truncated cache falls through to re-ingestion."""
+    from repro.graphs.io import cache_is_fresh
+
+    p = _write(tmp_path, "".join(f"{i} {i + 1}\n" for i in range(64)))
+    for member in CACHE_FILES:
+        g = load_graph(p)
+        assert cache_is_fresh(g.cache_dir, p)
+        blob = os.path.join(g.cache_dir, member)
+        with open(blob, "r+b") as f:
+            f.truncate(os.path.getsize(blob) - 4)
+        assert not cache_is_fresh(g.cache_dir, p), member
+        g2 = load_graph(p)
+        assert g2.source == "real" and g2.stats.bytes_parsed > 0, member
+        assert _edges(g2) == (list(range(64)), list(range(1, 65)))
+    # grown blobs (appended garbage) and dtype swaps are stale as well
+    g = load_graph(p)
+    blob = os.path.join(g.cache_dir, "src.npy")
+    with open(blob, "ab") as f:
+        f.write(b"\x00" * 8)
+    assert not cache_is_fresh(g.cache_dir, p)
+    g = load_graph(p)
+    np.save(os.path.join(g.cache_dir, "indptr.npy"),
+            np.load(os.path.join(g.cache_dir, "indptr.npy")
+                    ).astype(np.int32))
+    assert not cache_is_fresh(g.cache_dir, p)
+
+
 def test_cache_invalidated_when_file_changes(tmp_path):
     p = _write(tmp_path, "0 1\n")
     g1 = load_graph(p)

@@ -1,0 +1,65 @@
+"""Preemption safety end-to-end (subprocess): SIGTERM/SIGINT trigger a
+cooperative save-and-exit with ``RESUMABLE_EXIT``, the committed
+checkpoint resumes bit-identically, a half-written ``.tmp-`` directory is
+ignored, and a second signal hard-exits immediately."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime import RESUMABLE_EXIT
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(mode, d, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "preempt_check.py"),
+         mode, "--dir", str(d)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+def _last_json(out):
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("mode,signame", [("term", "SIGTERM"),
+                                          ("int", "SIGINT")])
+def test_signal_saves_and_resumes_bit_identical(tmp_path, mode, signame):
+    d = tmp_path / mode
+    out = _run(mode, d)
+    assert out.returncode == RESUMABLE_EXIT, \
+        f"{signame}: rc={out.returncode}\nstderr:\n{out.stderr}"
+    rec = _last_json(out)
+    assert rec["preempted"] and rec["step"] == 2  # first chunk boundary
+    # the save is committed, not torn
+    step_dir = d / f"step_{rec['step']:010d}"
+    assert (step_dir / "COMMIT").exists()
+    assert (step_dir / "manifest.json").exists()
+
+    # a torn half-write next to it must not confuse restore…
+    junk = d / ".tmp-99"
+    junk.mkdir()
+    (junk / "garbage.npy").write_bytes(b"\x00" * 16)
+
+    golden = _last_json(_run("golden", tmp_path / "unused"))
+    resumed = _run("resume", d)
+    assert resumed.returncode == 0, resumed.stderr
+    rec_r = _last_json(resumed)
+    assert rec_r.pop("resumed_from") == rec["step"]
+    assert rec_r == golden  # bit-identical final metrics + partition sums
+    # …and the next save's GC has cleared it
+    assert not junk.exists()
+
+
+def test_second_signal_hard_exits(tmp_path):
+    out = _run("double", tmp_path / "double")
+    assert out.returncode == 128 + signal.SIGTERM, \
+        f"rc={out.returncode}\nstderr:\n{out.stderr}"

@@ -61,6 +61,40 @@ def test_checkpoint_restore_shape_mismatch(tmp_path):
         mgr.restore({"w": jnp.zeros((3, 3))})
 
 
+def test_checkpoint_tmp_dir_ignored_and_gced(tmp_path):
+    """A crash mid-write leaves only a ``.tmp-`` dir: restore never sees
+    it, and the next successful save garbage-collects it."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(4, _tree())
+    # simulate a writer killed between makedirs and the COMMIT fsync
+    junk = tmp_path / ".tmp-9"
+    junk.mkdir()
+    (junk / "w.npy").write_bytes(b"partial garbage")
+    assert mgr.latest_step() == 4
+    got, step, _ = mgr.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 4
+    mgr.save(5, _tree(1))
+    assert not junk.exists()
+    assert mgr.all_steps() == [4, 5]
+
+
+def test_checkpoint_save_stats_and_step_bytes(tmp_path):
+    """Per-step accounting feeds the EXPERIMENTS §Resume overhead table:
+    snapshot time (what the driver pays), write time, committed bytes."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save_async(2, tree, extra={"t_next": 3})
+    mgr.wait()
+    st = mgr.save_stats[2]
+    assert st["snapshot_wall_s"] > 0.0
+    assert st["write_wall_s"] > 0.0
+    assert st["bytes"] == mgr.step_bytes(2) > 0
+    # payload bytes dominate: every leaf is on disk
+    leaf_bytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(tree))
+    assert st["bytes"] > leaf_bytes
+    assert mgr.step_bytes(99) == 0  # absent step
+
+
 # ---------------------------------------------------------------------------
 # elastic planning
 # ---------------------------------------------------------------------------
