@@ -1,0 +1,154 @@
+"""Query-serving throughput: batched device engine vs single-query numpy.
+
+    PYTHONPATH=src python -m benchmarks.querybench --batches 1 8 64 256
+
+Summarizes the benchmark graph once, then serves the same mixed workload
+(degree / adjacency / PageRank probes) three ways:
+
+  * ``numpy``        — one `repro.core.queries` call per request, the
+    status-quo single-query path (block build memoized; the PageRank probe
+    pays a full power iteration per call, which is exactly what a serving
+    layer exists to amortize);
+  * ``numpy-cached`` — same, but with the PageRank vector hand-cached
+    across requests: the best a host-side loop can do;
+  * ``jax``          — the batched :class:`QueryEngine` at each ``--batches``
+    slot width through the `launch.query_serve` scheduler.
+
+Rows land in ``artifacts/bench/querybench.json`` (bench="querybench") for
+the `scripts/check_bench.py --bench querybench` regression gate;
+``--min-speedup`` turns the measured jax-vs-numpy ratio at
+``--min-speedup-batch`` into a hard exit-status gate (CI: ≥10× at 64).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_artifact
+from repro.core import SummaryConfig, summarize
+from repro.core import queries as Q
+from repro.core.queries_jax import (
+    KIND_ADJACENCY,
+    KIND_DEGREE,
+    KIND_PAGERANK,
+    QueryEngine,
+)
+from repro.graphs import load_graph
+from repro.launch.query_serve import QueryServer, random_workload
+
+KINDS = [KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK]
+
+
+def numpy_serve(res, reqs, pagerank_iters: int, cache_pagerank: bool):
+    """Answer the request list one query at a time on the host."""
+    pr = None
+    out = np.zeros(len(reqs))
+    for i, req in enumerate(reqs):
+        if req.kind == KIND_DEGREE:
+            out[i] = Q.expected_degree(res, req.u)
+        elif req.kind == KIND_ADJACENCY:
+            out[i] = Q.adjacency_weight(res, req.u, req.v)
+        else:
+            if cache_pagerank:
+                if pr is None:
+                    pr = Q.pagerank_summary(res, iters=pagerank_iters)
+                out[i] = pr[req.u]
+            else:
+                out[i] = Q.pagerank_summary(res, iters=pagerank_iters)[req.u]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="ego-facebook")
+    ap.add_argument("--scale", type=float, default=0.06)
+    ap.add_argument("--k-frac", type=float, default=0.4)
+    ap.add_argument("--T", type=int, default=6)
+    ap.add_argument("--group-size", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--numpy-requests", type=int, default=128,
+                    help="request count for the numpy baselines (each "
+                         "PageRank probe is a full power iteration)")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 64, 256])
+    ap.add_argument("--pagerank-iters", type=int, default=50)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit 1 unless jax/numpy QPS ratio reaches this "
+                         "at --min-speedup-batch (the CI acceptance gate)")
+    ap.add_argument("--min-speedup-batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    g = load_graph(args.dataset, scale=args.scale, seed=args.seed)
+    src, dst, v = np.asarray(g.src), np.asarray(g.dst), g.num_nodes
+    res = summarize(src, dst, v, SummaryConfig(
+        T=args.T, k_frac=args.k_frac, group_size=args.group_size,
+        seed=args.seed), collect_history=False)
+    rng = np.random.default_rng(args.seed)
+    rows = []
+
+    # ---- numpy single-query baselines ---------------------------------
+    np_reqs = random_workload(rng, v, args.numpy_requests, KINDS)
+    Q.build_block_summary(res)  # memoized build outside the timed window
+    for cached, label in ((False, "numpy"), (True, "numpy-cached")):
+        t0 = time.perf_counter()
+        numpy_serve(res, np_reqs, args.pagerank_iters, cached)
+        wall = time.perf_counter() - t0
+        qps = len(np_reqs) / max(wall, 1e-9)
+        rows.append({"bench": "querybench", "engine": label, "batch": 1,
+                     "query": "mixed", "requests": len(np_reqs),
+                     "qps": qps, "wall_s": wall})
+        emit(rows[-1])
+    numpy_qps = rows[0]["qps"]
+
+    # ---- batched device engine across slot widths ---------------------
+    engine = QueryEngine(res, pagerank_iters=args.pagerank_iters)
+    speedup_at_gate = None
+    for batch in args.batches:
+        server = QueryServer(engine, slots=batch)
+        for req in random_workload(rng, v, batch, KINDS):  # compile
+            server.submit(req)
+        while server.step():
+            pass
+        server.done.clear()
+        reqs = random_workload(rng, v, args.requests, KINDS)
+        t0 = time.perf_counter()
+        for req in reqs:
+            server.submit(req)
+        while server.step():
+            pass
+        wall = time.perf_counter() - t0
+        lat = np.array([r.t_done - r.t_submit for r in server.done])
+        qps = len(reqs) / max(wall, 1e-9)
+        speedup = qps / numpy_qps
+        rows.append({"bench": "querybench", "engine": "jax", "batch": batch,
+                     "query": "mixed", "requests": len(reqs), "qps": qps,
+                     "p50_latency_s": float(np.percentile(lat, 50)),
+                     "p99_latency_s": float(np.percentile(lat, 99)),
+                     "speedup_vs_numpy": speedup, "wall_s": wall})
+        emit(rows[-1])
+        if batch >= args.min_speedup_batch and speedup_at_gate is None:
+            speedup_at_gate = speedup
+
+    path = save_artifact("querybench", rows)
+    print(f"saved {path}")
+
+    if args.min_speedup is not None:
+        if speedup_at_gate is None:
+            print(f"no batch >= {args.min_speedup_batch} was measured")
+            return 1
+        if speedup_at_gate < args.min_speedup:
+            print(f"speedup gate FAILED: {speedup_at_gate:.1f}x < "
+                  f"{args.min_speedup:.1f}x at batch "
+                  f">= {args.min_speedup_batch}")
+            return 1
+        print(f"speedup gate ok: {speedup_at_gate:.1f}x >= "
+              f"{args.min_speedup:.1f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,21 @@
-"""Bench regression gate (CI): fig6 wall-clock vs the committed baseline.
+"""Bench regression gate (CI): benchmark artifacts vs committed baselines.
 
-Compares the `fig6` rows of `artifacts/bench/fig6_scalability.json`
-against `benchmarks/baselines/fig6_baseline.json` by (dataset, scale) and
-exits 1 if any scale regressed by more than --tolerance (default 25%)
-*and* by more than --min-delta-s (absolute noise floor — sub-second CI
-timings jitter far more than 25%). `--update` rewrites the baseline from
-the current artifact instead (how the baseline was seeded).
+Two gated benches, selected with ``--bench``:
 
-Run after the benchmark:  python scripts/check_bench.py
+  * ``fig6`` (default) — `artifacts/bench/fig6_scalability.json` vs
+    `benchmarks/baselines/fig6_baseline.json`, keyed (dataset, scale),
+    metric wall_s (higher is worse). Fails a scale that regressed by more
+    than --tolerance *and* by more than --min-delta-s (absolute noise
+    floor — sub-second CI timings jitter far more than 25%).
+  * ``querybench`` — `artifacts/bench/querybench.json` vs
+    `benchmarks/baselines/querybench_baseline.json`, keyed
+    (engine, batch), metric qps (lower is worse). Throughput on shared
+    runners jitters, so the CI invocation passes a wide --tolerance.
+
+``--update`` rewrites the selected baseline from the current artifact
+instead (how both baselines were seeded).
+
+Run after the benchmark:  python scripts/check_bench.py [--bench querybench]
 """
 
 from __future__ import annotations
@@ -18,76 +26,105 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ARTIFACT = os.path.join(ROOT, "artifacts", "bench", "fig6_scalability.json")
-BASELINE = os.path.join(ROOT, "benchmarks", "baselines",
-                        "fig6_baseline.json")
+ART_DIR = os.path.join(ROOT, "artifacts", "bench")
+BASE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+
+BENCHES = {
+    "fig6": dict(
+        artifact=os.path.join(ART_DIR, "fig6_scalability.json"),
+        baseline=os.path.join(BASE_DIR, "fig6_baseline.json"),
+        key=("dataset", "scale"),
+        metric="wall_s",
+        higher_is_worse=True,
+        keep=("bench", "dataset", "scale", "V", "E", "T", "wall_s"),
+    ),
+    "querybench": dict(
+        artifact=os.path.join(ART_DIR, "querybench.json"),
+        baseline=os.path.join(BASE_DIR, "querybench_baseline.json"),
+        key=("engine", "batch"),
+        metric="qps",
+        higher_is_worse=False,
+        keep=("bench", "engine", "batch", "query", "requests", "qps"),
+    ),
+}
 
 
-def _rows(path: str) -> dict[tuple, dict]:
+def _rows(path: str, spec: dict, bench: str) -> dict[tuple, dict]:
     with open(path) as f:
         rows = json.load(f)
-    return {(r["dataset"], r["scale"]): r
-            for r in rows if r.get("bench") == "fig6"}
+    return {tuple(r[k] for k in spec["key"]): r
+            for r in rows if r.get("bench") == bench}
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--artifact", default=ARTIFACT)
-    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--bench", default="fig6", choices=sorted(BENCHES))
+    ap.add_argument("--artifact", default=None)
+    ap.add_argument("--baseline", default=None)
     ap.add_argument("--tolerance", type=float, default=0.25,
-                    help="relative wall-clock regression budget per scale")
+                    help="relative regression budget per row (wall-clock "
+                         "growth for fig6, QPS loss for querybench)")
     ap.add_argument("--min-delta-s", type=float, default=0.5,
-                    help="ignore regressions smaller than this in absolute "
-                         "seconds (timer noise on shared CI runners)")
+                    help="fig6 only: ignore regressions smaller than this "
+                         "in absolute seconds (timer noise on shared CI "
+                         "runners)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current artifact")
     args = ap.parse_args(argv)
 
-    if not os.path.exists(args.artifact):
-        print(f"missing benchmark artifact: {args.artifact} "
-              f"(run benchmarks.fig6_scalability first)")
+    spec = BENCHES[args.bench]
+    artifact = args.artifact or spec["artifact"]
+    baseline = args.baseline or spec["baseline"]
+    metric = spec["metric"]
+
+    if not os.path.exists(artifact):
+        print(f"missing benchmark artifact: {artifact} "
+              f"(run the {args.bench} benchmark first)")
         return 1
-    cur = _rows(args.artifact)
+    cur = _rows(artifact, spec, args.bench)
     if args.update:
-        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
-        keep = [{k: r[k] for k in
-                 ("bench", "dataset", "scale", "V", "E", "T", "wall_s")}
+        os.makedirs(os.path.dirname(baseline), exist_ok=True)
+        keep = [{k: r[k] for k in spec["keep"] if k in r}
                 for r in cur.values()]
-        with open(args.baseline, "w") as f:
+        with open(baseline, "w") as f:
             json.dump(keep, f, indent=1)
-        print(f"baseline updated: {args.baseline} ({len(keep)} scales)")
+        print(f"baseline updated: {baseline} ({len(keep)} rows)")
         return 0
 
-    if not os.path.exists(args.baseline):
-        print(f"missing baseline: {args.baseline} "
-              f"(seed it with --update)")
+    if not os.path.exists(baseline):
+        print(f"missing baseline: {baseline} (seed it with --update)")
         return 1
-    base = _rows(args.baseline)
+    base = _rows(baseline, spec, args.bench)
     failures, checked = [], 0
     for key, b in sorted(base.items()):
         c = cur.get(key)
         if c is None:
-            print(f"warn: baseline scale {key} not in current artifact; "
+            print(f"warn: baseline row {key} not in current artifact; "
                   f"skipped")
             continue
         checked += 1
-        ratio = c["wall_s"] / max(b["wall_s"], 1e-9)
-        delta = c["wall_s"] - b["wall_s"]
+        ratio = c[metric] / max(b[metric], 1e-9)
         verdict = "ok"
-        if ratio > 1.0 + args.tolerance and delta > args.min_delta_s:
+        if spec["higher_is_worse"]:
+            delta = c[metric] - b[metric]
+            if ratio > 1.0 + args.tolerance and delta > args.min_delta_s:
+                verdict = "REGRESSION"
+        elif ratio < 1.0 - args.tolerance:
             verdict = "REGRESSION"
+        if verdict != "ok":
             failures.append(key)
-        print(f"{key[0]} @ scale {key[1]}: {b['wall_s']:.3f}s -> "
-              f"{c['wall_s']:.3f}s ({ratio:.2f}x) {verdict}")
+        label = " @ ".join(str(k) for k in key)
+        print(f"{label}: {metric} {b[metric]:.3f} -> {c[metric]:.3f} "
+              f"({ratio:.2f}x) {verdict}")
     if not checked:
-        print("no overlapping (dataset, scale) rows between baseline and "
-              "artifact")
+        print(f"no overlapping {spec['key']} rows between baseline and "
+              f"artifact")
         return 1
     if failures:
-        print(f"\n{len(failures)} scale(s) regressed beyond "
-              f"{args.tolerance:.0%} (+{args.min_delta_s}s floor)")
+        print(f"\n{len(failures)} row(s) regressed beyond "
+              f"{args.tolerance:.0%}")
         return 1
-    print(f"\nbench gate ok: {checked} scale(s) within "
+    print(f"\nbench gate ok: {checked} row(s) within "
           f"{args.tolerance:.0%} of baseline")
     return 0
 

@@ -18,8 +18,9 @@ REQUIRED = ("DESIGN.md", "README.md", "EXPERIMENTS.md")
 # their section here (e.g. §10: streaming ingestion / CSR cache).
 REQUIRED_SECTIONS = {
     "DESIGN.md": {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11",
-                  "12", "13"},
-    "EXPERIMENTS.md": {"Dry-run", "Roofline", "Perf", "Memory", "Resume"},
+                  "12", "13", "14"},
+    "EXPERIMENTS.md": {"Dry-run", "Roofline", "Perf", "Memory", "Resume",
+                       "Queries"},
 }
 
 

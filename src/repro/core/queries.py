@@ -8,45 +8,193 @@ below therefore run in O(|S| + |P|) — supernode space — instead of
 O(|V| + |E|):
 
   * ``expected_degree`` — E[deg(u)] under Ĝ.
+  * ``adjacency_weight`` — Â_uv, one block-σ lookup.
   * ``pagerank_summary`` — PageRank of Ĝ by power iteration in block space
     (a block-constant vector stays block-constant under Âᵀ D⁻¹, so the
     |V|-dimensional iteration collapses exactly to |S| dimensions).
   * ``triangle_density`` — E[#triangles] of Ĝ from superedge weights.
+
+All queries consume one shared structure — :class:`BlockSummary`, the
+compacted block-space CSR built once per :class:`SummaryResult` by
+:func:`build_block_summary` (memoized on the result object; DESIGN.md §14).
+The batched device-resident engine in :mod:`repro.core.queries_jax` puts
+the *same* arrays on device, so the numpy functions here are its exact
+single-query reference.
+
+This module is numpy-only on purpose: it must stay importable without jax
+(parse tooling, fixture writers — same constraint as ``repro.graphs.io``).
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.types import SummaryResult
 
+# Build counter for the memoization regression test: two successive queries
+# against the same SummaryResult must hit the cache, not rebuild the CSR.
+BLOCK_BUILDS = 0
+
+_CACHE_ATTR = "_block_summary_cache"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSummary:
+    """Compacted block-space view of a summary graph (host numpy, float64).
+
+    Supernode ids are compacted to dense block indices ``0..S-1`` (sorted
+    original-id order). The superedge set is symmetrized into a CSR whose
+    rows AND columns are sorted — so the flattened key ``row·S + col`` is
+    globally sorted, which is what the device engine's O(log nnz) pair
+    lookup (``jnp.searchsorted``) relies on. Self-superedges appear as
+    diagonal entries ``(a, a)``; zero-capacity self pairs (singleton
+    blocks) are skipped at build, matching Eq. 1's empty Π.
+
+    ``deg_w[e] = σ_e · (n_col − [col == row])`` is the per-entry expected-
+    degree weight: ``deg[a] = Σ_e∈row(a) deg_w[e]`` and one PageRank power
+    step is ``new[a] = Σ_e∈row(a) deg_w[e] · share[col(e)]`` — both paths
+    (numpy here, jitted row reductions on device) reduce the same entries.
+    """
+
+    ids: np.ndarray        # int32[S] original supernode ids (sorted)
+    node2block: np.ndarray  # int32[V] dense block index per node
+    sizes: np.ndarray      # float64[S] block cardinalities n_a
+    indptr: np.ndarray     # int64[S+1] CSR row pointers
+    cols: np.ndarray       # int32[nnz] neighbor block (row-major, col-sorted)
+    sigma: np.ndarray      # float64[nnz] block-constant weight σ
+    deg_w: np.ndarray      # float64[nnz] σ·(n_col − [col==row])
+    deg: np.ndarray        # float64[S] expected degree per node of block
+    num_nodes: int         # |V|
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.cols.shape[0])
+
+    @property
+    def rows(self) -> np.ndarray:
+        """int32[nnz] row index of every CSR entry."""
+        return np.repeat(
+            np.arange(self.num_blocks, dtype=np.int32),
+            np.diff(self.indptr).astype(np.int64),
+        )
+
+    def max_row_nnz(self) -> int:
+        """Widest CSR row — the device engine's padded-row width D."""
+        if self.num_blocks == 0:
+            return 0
+        return int(np.max(np.diff(self.indptr)))
+
+
+def build_block_summary(res: SummaryResult) -> BlockSummary:
+    """Build (or fetch the memoized) block-space CSR for ``res``.
+
+    O(|P| log |P|) vectorized numpy — no Python loop over superedges. The
+    result is cached on the ``SummaryResult`` instance, so query calls
+    after the first are pure array lookups.
+    """
+    cached = getattr(res, _CACHE_ATTR, None)
+    if cached is not None:
+        return cached
+    global BLOCK_BUILDS
+    BLOCK_BUILDS += 1
+
+    ids = np.unique(np.asarray(res.node2super)).astype(np.int32)
+    s = ids.shape[0]
+    node2block = np.searchsorted(ids, np.asarray(res.node2super)).astype(
+        np.int32)
+    n = np.asarray(res.super_size)[ids].astype(np.float64)
+
+    lo = np.searchsorted(ids, np.asarray(res.edge_lo)).astype(np.int64)
+    hi = np.searchsorted(ids, np.asarray(res.edge_hi)).astype(np.int64)
+    w = np.asarray(res.edge_w, dtype=np.float64)
+    self_e = lo == hi
+    # pair capacities |Π_AB| (Eq. 1); zero-capacity self pairs are dropped
+    pi = np.where(self_e, n[lo] * (n[lo] - 1.0) / 2.0, n[lo] * n[hi])
+    keep = ~self_e | (pi > 0)
+    lo, hi, self_e = lo[keep], hi[keep], self_e[keep]
+    sig = np.where(pi[keep] > 0, w[keep] / np.maximum(pi[keep], 1.0), 0.0)
+
+    # symmetrize: one CSR entry per direction, self pairs once
+    rows = np.concatenate([lo, hi[~self_e]])
+    cols = np.concatenate([hi, lo[~self_e]])
+    sigs = np.concatenate([sig, sig[~self_e]])
+    order = np.lexsort((cols, rows))
+    rows, cols, sigs = rows[order], cols[order], sigs[order]
+
+    indptr = np.zeros(s + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    deg_w = sigs * (n[cols] - (cols == rows).astype(np.float64))
+    deg = np.zeros(s, dtype=np.float64)
+    np.add.at(deg, rows, deg_w)
+
+    bs = BlockSummary(
+        ids=ids, node2block=node2block, sizes=n, indptr=indptr,
+        cols=cols.astype(np.int32), sigma=sigs, deg_w=deg_w, deg=deg,
+        num_nodes=int(np.asarray(res.node2super).shape[0]),
+    )
+    res.__dict__[_CACHE_ATTR] = bs
+    return bs
+
 
 def _block_weights(res: SummaryResult):
-    """(ids, sizes, neighbor lists) in compacted supernode space."""
-    ids = np.unique(res.node2super)
-    idx = {int(a): i for i, a in enumerate(ids)}
-    n = res.super_size[ids].astype(np.float64)
-    nbrs: list[list[tuple[int, float]]] = [[] for _ in ids]
-    for lo, hi, w in zip(res.edge_lo, res.edge_hi, res.edge_w):
-        i, j = idx[int(lo)], idx[int(hi)]
-        if i == j:
-            pi = n[i] * (n[i] - 1) / 2.0
-            if pi > 0:
-                nbrs[i].append((i, w / pi))
-        else:
-            pi = n[i] * n[j]
-            nbrs[i].append((j, w / pi))
-            nbrs[j].append((i, w / pi))
-    return ids, idx, n, nbrs
+    """Back-compat view of the old tuple API over the shared builder."""
+    bs = build_block_summary(res)
+    idx = {int(a): i for i, a in enumerate(bs.ids)}
+    nbrs = [
+        list(zip(bs.cols[bs.indptr[a]:bs.indptr[a + 1]].tolist(),
+                 bs.sigma[bs.indptr[a]:bs.indptr[a + 1]].tolist()))
+        for a in range(bs.num_blocks)
+    ]
+    return bs.ids, idx, bs.sizes, nbrs
 
 
 def expected_degree(res: SummaryResult, u: int) -> float:
-    ids, idx, n, nbrs = _block_weights(res)
-    a = idx[int(res.node2super[u])]
-    out = 0.0
-    for b, sigma in nbrs[a]:
-        out += sigma * (n[b] - 1.0 if b == a else n[b])
-    return out
+    bs = build_block_summary(res)
+    return float(bs.deg[bs.node2block[int(u)]])
+
+
+def adjacency_weight(res: SummaryResult, u: int, v: int) -> float:
+    """Â_uv of the reconstructed Ĝ (Eq. 1): the σ of the (block(u),
+    block(v)) superedge, 0 on the diagonal and for absent pairs."""
+    if int(u) == int(v):
+        return 0.0
+    bs = build_block_summary(res)
+    a = int(bs.node2block[int(u)])
+    b = int(bs.node2block[int(v)])
+    row = bs.cols[bs.indptr[a]:bs.indptr[a + 1]]
+    pos = np.searchsorted(row, b)
+    if pos < row.shape[0] and row[pos] == b:
+        return float(bs.sigma[bs.indptr[a] + pos])
+    return 0.0
+
+
+def pagerank_blocks(bs: BlockSummary, damping: float = 0.85,
+                    iters: int = 50, tol: float = 1e-10) -> np.ndarray:
+    """Power iteration in block space: per-node PageRank value of each
+    block (float64[S]). The device engine's ``lax.while_loop`` mirrors
+    this loop update-for-update, including the early tolerance break."""
+    s = bs.num_blocks
+    v_total = float(bs.num_nodes)
+    rows = bs.rows
+    p = np.full(s, 1.0 / v_total)
+    for _ in range(iters):
+        share = np.where(bs.deg > 0, p / np.maximum(bs.deg, 1e-300), 0.0)
+        new = np.zeros(s)
+        np.add.at(new, rows, bs.deg_w * share[bs.cols])
+        dangling = float(np.sum(np.where(bs.deg <= 0, p * bs.sizes, 0.0)))
+        new = (1.0 - damping) / v_total + damping * (new + dangling / v_total)
+        if float(np.max(np.abs(new - p))) < tol:
+            p = new
+            break
+        p = new
+    return p
 
 
 def pagerank_summary(res: SummaryResult, damping: float = 0.85,
@@ -57,57 +205,37 @@ def pagerank_summary(res: SummaryResult, damping: float = 0.85,
     its supernode's block value. Dangling blocks (zero expected degree)
     redistribute uniformly, matching the standard convention.
     """
-    ids, idx, n, nbrs = _block_weights(res)
-    v_total = float(res.node2super.shape[0])
-    s = len(ids)
-    # expected degree per node of each block
-    deg = np.zeros(s)
-    for a in range(s):
-        for b, sigma in nbrs[a]:
-            deg[a] += sigma * (n[b] - 1.0 if b == a else n[b])
-    p = np.full(s, 1.0 / v_total)  # per-node value, block-constant
-    for _ in range(iters):
-        # mass leaving each node of block B: p_B / deg_B per unit weight
-        share = np.where(deg > 0, p / np.maximum(deg, 1e-300), 0.0)
-        new = np.zeros(s)
-        for a in range(s):
-            acc = 0.0
-            for b, sigma in nbrs[a]:
-                if b == a:
-                    acc += sigma * (n[a] - 1.0) * share[a]
-                else:
-                    acc += sigma * n[b] * share[b]
-            new[a] = acc
-        dangling = float(np.sum(np.where(deg <= 0, p * n, 0.0)))
-        new = (1.0 - damping) / v_total + damping * (new + dangling / v_total)
-        if float(np.max(np.abs(new - p))) < tol:
-            p = new
-            break
-        p = new
-    out = np.zeros(int(v_total))
-    for a_id, i in idx.items():
-        out[res.node2super == a_id] = p[i]
-    return out
+    bs = build_block_summary(res)
+    p = pagerank_blocks(bs, damping=damping, iters=iters, tol=tol)
+    return p[bs.node2block]
+
+
+def triangle_blocks(bs: BlockSummary) -> float:
+    """E[#triangles] over strictly-distinct block triples a<b<c on the
+    superedge support: Σ σ_ab σ_bc σ_ca n_a n_b n_c."""
+    sig = {}
+    rows = bs.rows
+    for a, b, w in zip(rows, bs.cols, bs.sigma):
+        sig[(int(a), int(b))] = float(w)
+    total = 0.0
+    for a in range(bs.num_blocks):
+        for eb in range(int(bs.indptr[a]), int(bs.indptr[a + 1])):
+            b = int(bs.cols[eb])
+            if b <= a:
+                continue
+            sab = float(bs.sigma[eb])
+            for ec in range(int(bs.indptr[b]), int(bs.indptr[b + 1])):
+                c = int(bs.cols[ec])
+                if c <= b:
+                    continue
+                sca = sig.get((c, a))
+                if sca is not None:
+                    total += (sab * float(bs.sigma[ec]) * sca
+                              * bs.sizes[a] * bs.sizes[b] * bs.sizes[c])
+    return total
 
 
 def triangle_density(res: SummaryResult) -> float:
     """E[#triangles] of Ĝ (sum over supernode triples of σ products),
     restricted to the superedge support — O(|P|·deg) like [19]."""
-    ids, idx, n, nbrs = _block_weights(res)
-    s = len(ids)
-    sig = {}
-    for a in range(s):
-        for b, w in nbrs[a]:
-            sig[(a, b)] = w
-    total = 0.0
-    for a in range(s):
-        for b, sab in nbrs[a]:
-            if b <= a:
-                continue
-            for c, sbc in nbrs[b]:
-                if c <= b:
-                    continue
-                sca = sig.get((c, a))
-                if sca is not None:
-                    total += sab * sbc * sca * n[a] * n[b] * n[c]
-    return total
+    return triangle_blocks(build_block_summary(res))

@@ -1,0 +1,436 @@
+"""Batched, device-resident summary-query engine (DESIGN.md §14).
+
+The numpy functions in :mod:`repro.core.queries` answer one query at a
+time on the host. This module serves the same block-space math at
+interactive traffic: the :class:`~repro.core.queries.BlockSummary` CSR is
+put on device once (float64 via the ``enable_x64`` scope — queries are
+read-mostly and tiny next to the summary, so full precision is free) and
+every query kernel is jitted and vectorized over a ``[B]`` request batch:
+
+  * ``expected_degree``  — one gather: ``deg[node2block[u]]``;
+  * ``adjacency_weight`` — O(log nnz) lookup of σ via ``searchsorted`` on
+    the globally-sorted ``row·S + col`` key;
+  * ``pagerank``         — block-space power iteration as a
+    ``lax.while_loop`` (computed once, then served as a gather), mirroring
+    :func:`repro.core.queries.pagerank_blocks` update-for-update including
+    the early tolerance break;
+  * ``triangle_density`` — per-row wedge sums over the padded-row layout,
+    chunked with ``lax.map`` so memory stays ``O(chunk · D²)``.
+
+Every kernel reduces each CSR row over the same padded ``[S, D]`` layout,
+so per-row values are bit-identical between the single-device
+:class:`QueryEngine` and the owner-routed :class:`RoutedQueryEngine`: the
+routed engine masks each row/query to the device owning its supernode
+(``MeshRules.owner`` — the same hash that routes the distributed merge
+step's pair exchange) and merges with a ``psum`` of disjoint one-hot
+contributions, which is exact in floating point (one real value plus
+zeros). This is the first shard-routing tier of SNIPPETS Snippet 3's
+fan-out → owner-routed progression: *compute* is routed per owner, the
+summary arrays themselves are still replicated per device (the two-tier
+memory-partitioned layout is the follow-up, ROADMAP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.queries import BlockSummary, build_block_summary
+from repro.core.types import SummaryResult
+from repro.dist import make_rules, shard_map
+
+# Query kinds of the serving wire format (int32 per slot).
+KIND_DEGREE = 0
+KIND_ADJACENCY = 1
+KIND_PAGERANK = 2
+KIND_TRIANGLE = 3
+KIND_NAMES = {
+    "degree": KIND_DEGREE,
+    "adjacency": KIND_ADJACENCY,
+    "pagerank": KIND_PAGERANK,
+    "triangle": KIND_TRIANGLE,
+}
+# kinds with no per-node target: answered by (routed to) device 0
+_GLOBAL_KINDS = (KIND_TRIANGLE,)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBlocks:
+    """The BlockSummary arrays on device (float64), plus static shape meta.
+
+    ``pad_*`` is the row-major padded layout ``[S, D]`` (D = widest CSR
+    row, at least 1): entry ``[a, j]`` is row a's j-th neighbor, padding
+    has ``pad_cols == -1`` and zero σ/deg_w so masked reductions are
+    exact. ``key = row·S + col`` over the flat entries is globally sorted
+    (CSR rows and columns both sorted), enabling binary-search pair
+    lookups.
+    """
+
+    node2block: jax.Array  # int32[V]
+    sizes: jax.Array       # float64[S]
+    deg: jax.Array         # float64[S]
+    key: jax.Array         # int64[nnz] sorted row·S + col
+    sigma: jax.Array       # float64[nnz] (key order)
+    pad_cols: jax.Array    # int32[S, D] (-1 padding)
+    pad_sigma: jax.Array   # float64[S, D]
+    pad_degw: jax.Array    # float64[S, D]
+    s: int                 # static |S|
+    d: int                 # static padded row width
+    nnz: int               # static superedge-entry count
+    num_nodes: int         # static |V|
+
+
+jax.tree_util.register_pytree_node(
+    DeviceBlocks,
+    lambda b: ((b.node2block, b.sizes, b.deg, b.key, b.sigma, b.pad_cols,
+                b.pad_sigma, b.pad_degw),
+               (b.s, b.d, b.nnz, b.num_nodes)),
+    lambda meta, leaves: DeviceBlocks(*leaves, *meta),
+)
+
+
+def device_blocks(bs: BlockSummary) -> DeviceBlocks:
+    """Put a host BlockSummary on device (call under ``enable_x64``)."""
+    s, nnz = bs.num_blocks, bs.nnz
+    d = max(1, bs.max_row_nnz())
+    rows = bs.rows.astype(np.int64)
+    offs = np.arange(nnz, dtype=np.int64) - bs.indptr[rows]
+    pad_cols = np.full((s, d), -1, dtype=np.int32)
+    pad_sigma = np.zeros((s, d), dtype=np.float64)
+    pad_degw = np.zeros((s, d), dtype=np.float64)
+    if nnz:
+        pad_cols[rows, offs] = bs.cols
+        pad_sigma[rows, offs] = bs.sigma
+        pad_degw[rows, offs] = bs.deg_w
+    return DeviceBlocks(
+        node2block=jnp.asarray(bs.node2block, jnp.int32),
+        sizes=jnp.asarray(bs.sizes, jnp.float64),
+        deg=jnp.asarray(bs.deg, jnp.float64),
+        key=jnp.asarray(rows * s + bs.cols, jnp.int64),
+        sigma=jnp.asarray(bs.sigma, jnp.float64),
+        pad_cols=jnp.asarray(pad_cols),
+        pad_sigma=jnp.asarray(pad_sigma),
+        pad_degw=jnp.asarray(pad_degw),
+        s=s, d=d, nnz=nnz, num_nodes=bs.num_nodes,
+    )
+
+
+# --------------------------------------------------------------- kernels
+# Pure functions of (DeviceBlocks, batch arrays); shared verbatim by the
+# single-device and routed engines so per-row/per-query float values are
+# identical on both paths.
+
+def degree_kernel(dev: DeviceBlocks, u: jax.Array) -> jax.Array:
+    return dev.deg[dev.node2block[u]]
+
+
+def adjacency_kernel(dev: DeviceBlocks, u: jax.Array,
+                     v: jax.Array) -> jax.Array:
+    if dev.nnz == 0:
+        return jnp.zeros(u.shape, jnp.float64)
+    a = dev.node2block[u].astype(jnp.int64)
+    b = dev.node2block[v].astype(jnp.int64)
+    qk = a * dev.s + b
+    pos = jnp.clip(jnp.searchsorted(dev.key, qk), 0, dev.nnz - 1)
+    sig = jnp.where(dev.key[pos] == qk, dev.sigma[pos], 0.0)
+    return jnp.where(u == v, 0.0, sig)
+
+
+def pagerank_row_sums(dev: DeviceBlocks, share: jax.Array) -> jax.Array:
+    """Σ_e∈row deg_w[e]·share[col(e)] for every row — the power-step row
+    reduction (padding contributes exact zeros)."""
+    gathered = share[jnp.clip(dev.pad_cols, 0, max(dev.s - 1, 0))]
+    return jnp.sum(dev.pad_degw * gathered, axis=-1)
+
+
+def pagerank_update(dev: DeviceBlocks, p: jax.Array, new_rows: jax.Array,
+                    damping: float) -> tuple[jax.Array, jax.Array]:
+    """Damping + dangling redistribution + tolerance residual (replicated
+    math: identical on every device from replicated ``p``/``new_rows``)."""
+    vt = float(dev.num_nodes)
+    dangling = jnp.sum(jnp.where(dev.deg <= 0, p * dev.sizes, 0.0))
+    new = (1.0 - damping) / vt + damping * (new_rows + dangling / vt)
+    return new, jnp.max(jnp.abs(new - p))
+
+
+def triangle_rows(dev: DeviceBlocks, row_chunk: int) -> jax.Array:
+    """Per-row triangle mass tri[a] = Σ_{b>a} σ_ab n_a n_b Σ_{c>b} σ_bc
+    σ_ca n_c (float64[S]); total = tri.sum(). Chunked over rows so the
+    [chunk, D, D] wedge tensor bounds memory; chunking never changes a
+    row's value, so any chunk size yields identical per-row floats."""
+    s, d = dev.s, dev.d
+    if dev.nnz == 0:
+        return jnp.zeros((s,), jnp.float64)
+    chunk = max(1, min(row_chunk, s))
+    n_chunks = -(-s // chunk)
+    row_ids = jnp.arange(n_chunks * chunk, dtype=jnp.int32)
+    row_ids = row_ids.reshape(n_chunks, chunk)
+
+    def one_chunk(rows):
+        live = rows < s
+        a = jnp.clip(rows, 0, s - 1)
+        b = dev.pad_cols[a]                                    # [R, D]
+        sab = dev.pad_sigma[a]
+        mask_b = (b > a[:, None]) & live[:, None]
+        bc = jnp.clip(b, 0, s - 1)
+        c = dev.pad_cols[bc]                                   # [R, D, D]
+        sbc = dev.pad_sigma[bc]
+        mask_c = (c >= 0) & (c > b[:, :, None]) & mask_b[:, :, None]
+        qk = (jnp.clip(c, 0, s - 1).astype(jnp.int64) * s
+              + a[:, None, None].astype(jnp.int64))
+        pos = jnp.clip(jnp.searchsorted(dev.key, qk.ravel()),
+                       0, dev.nnz - 1).reshape(qk.shape)
+        sca = jnp.where(mask_c & (dev.key[pos] == qk), dev.sigma[pos], 0.0)
+        nc = dev.sizes[jnp.clip(c, 0, s - 1)]
+        inner = jnp.sum(jnp.where(mask_c, sbc * sca * nc, 0.0), axis=-1)
+        w = jnp.where(
+            mask_b,
+            sab * inner * dev.sizes[a][:, None]
+            * dev.sizes[jnp.clip(b, 0, s - 1)],
+            0.0,
+        )
+        return jnp.sum(w, axis=-1)                             # [R]
+
+    tri = jax.lax.map(one_chunk, row_ids).reshape(-1)
+    return tri[:s]
+
+
+def answer_kernel(dev: DeviceBlocks, kinds, u, v, pr_blocks, tri) -> jax.Array:
+    """One fused batched dispatch: per-slot answer selected by kind."""
+    deg = degree_kernel(dev, u)
+    adj = adjacency_kernel(dev, u, v)
+    prq = pr_blocks[dev.node2block[u]]
+    tri_b = jnp.broadcast_to(tri, kinds.shape)
+    return jnp.select(
+        [kinds == KIND_DEGREE, kinds == KIND_ADJACENCY,
+         kinds == KIND_PAGERANK, kinds == KIND_TRIANGLE],
+        [deg, adj, prq, tri_b], 0.0)
+
+
+def _pagerank_while(dev: DeviceBlocks, damping: float, iters: int,
+                    tol: float, row_sums_fn) -> jax.Array:
+    """The shared power-iteration loop; ``row_sums_fn`` is the only part
+    that differs between the local and routed engines."""
+    vt = float(dev.num_nodes)
+    p0 = jnp.full((dev.s,), 1.0 / vt, jnp.float64)
+
+    def cond(carry):
+        _, i, done = carry
+        return (i < iters) & ~done
+
+    def body(carry):
+        p, i, _ = carry
+        share = jnp.where(dev.deg > 0, p / jnp.maximum(dev.deg, 1e-300),
+                          0.0)
+        new, resid = pagerank_update(dev, p, row_sums_fn(share), damping)
+        return new, i + 1, resid < tol
+
+    p, _, _ = jax.lax.while_loop(
+        cond, body, (p0, jnp.int32(0), jnp.bool_(False)))
+    return p
+
+
+class QueryEngine:
+    """Single-device batched query engine over one summary.
+
+    Shapes are static per engine (one compilation per summary + batch
+    size, amortized over the serving lifetime). PageRank and triangle
+    density are computed lazily on first use and then served as a gather /
+    a broadcast scalar.
+    """
+
+    def __init__(self, summary: SummaryResult | BlockSummary, *,
+                 damping: float = 0.85, pagerank_iters: int = 50,
+                 pagerank_tol: float = 1e-10, triangle_row_chunk: int = 64):
+        self.bs = (summary if isinstance(summary, BlockSummary)
+                   else build_block_summary(summary))
+        self.damping = damping
+        self.pagerank_iters = pagerank_iters
+        self.pagerank_tol = pagerank_tol
+        self.triangle_row_chunk = triangle_row_chunk
+        self._pr_blocks = None
+        self._tri = None
+        with enable_x64():
+            self.dev = device_blocks(self.bs)
+            self._degree = jax.jit(degree_kernel)
+            self._adjacency = jax.jit(adjacency_kernel)
+            self._answer = jax.jit(answer_kernel)
+            self._pagerank = jax.jit(
+                lambda dev: _pagerank_while(
+                    dev, damping, pagerank_iters, pagerank_tol,
+                    lambda share: pagerank_row_sums(dev, share)))
+            self._triangle = jax.jit(
+                lambda dev: jnp.sum(triangle_rows(dev, triangle_row_chunk)))
+
+    # ------------------------------------------------ lazy global queries
+    def pagerank_blocks(self) -> jax.Array:
+        if self._pr_blocks is None:
+            with enable_x64():
+                self._pr_blocks = self._pagerank(self.dev)
+        return self._pr_blocks
+
+    def triangle_density(self) -> float:
+        if self._tri is None:
+            with enable_x64():
+                self._tri = self._triangle(self.dev)
+        return float(self._tri)
+
+    def pagerank_nodes(self, u) -> np.ndarray:
+        pr = self.pagerank_blocks()
+        with enable_x64():
+            out = pr[self.dev.node2block[jnp.asarray(u, jnp.int32)]]
+        return np.asarray(out)
+
+    # --------------------------------------------------- batched queries
+    def expected_degree(self, u) -> np.ndarray:
+        with enable_x64():
+            return np.asarray(
+                self._degree(self.dev, jnp.asarray(u, jnp.int32)))
+
+    def adjacency_weight(self, u, v) -> np.ndarray:
+        with enable_x64():
+            return np.asarray(self._adjacency(
+                self.dev, jnp.asarray(u, jnp.int32),
+                jnp.asarray(v, jnp.int32)))
+
+    def answer_batch(self, kinds, u, v) -> np.ndarray:
+        """Mixed-kind batch: ``kinds``/``u``/``v`` are int32[B]; returns
+        float64[B]. The global-query inputs (PageRank vector, triangle
+        scalar) are materialized only if the batch asks for them."""
+        kinds = np.asarray(kinds, np.int32)
+        pr = (self.pagerank_blocks() if (kinds == KIND_PAGERANK).any()
+              else None)
+        tri = (self.triangle_density() if (kinds == KIND_TRIANGLE).any()
+               else 0.0)
+        with enable_x64():
+            if pr is None:
+                pr = jnp.zeros((self.dev.s,), jnp.float64)
+            return np.asarray(self._answer(
+                self.dev, jnp.asarray(kinds), jnp.asarray(u, jnp.int32),
+                jnp.asarray(v, jnp.int32), pr,
+                jnp.asarray(tri, jnp.float64)))
+
+
+class RoutedQueryEngine:
+    """Owner-routed multi-device engine: same kernels, psum'd merge.
+
+    Each supernode (block) is owned by ``MeshRules.owner(id, salt)`` — the
+    re-drawable hash the distributed merge step already routes pairs with,
+    so tooling that predicts record placement agrees across subsystems.
+    Per-node queries are answered only by the owner of the target's block;
+    global queries (PageRank rows, triangle rows) are computed per owned
+    row and merged with a psum of disjoint contributions — exact, and
+    bit-identical to :class:`QueryEngine` because every row reduces the
+    same padded layout in the same order (tests/query_serve_check.py).
+
+    A mesh change (elastic shrink/grow) is a routing-table rebuild:
+    construct a new engine on the survivor mesh — the owner hash only
+    depends on device *count* and salt.
+    """
+
+    def __init__(self, summary: SummaryResult | BlockSummary, mesh, *,
+                 salt: int = 0, damping: float = 0.85,
+                 pagerank_iters: int = 50, pagerank_tol: float = 1e-10,
+                 triangle_row_chunk: int = 64):
+        self.bs = (summary if isinstance(summary, BlockSummary)
+                   else build_block_summary(summary))
+        self.mesh = mesh
+        self.rules = make_rules(mesh, "summarize")
+        self.salt = salt
+        self.axis_names = tuple(mesh.axis_names)
+        self._pr_blocks = None
+        self._tri = None
+        axis_names = self.axis_names
+        rep = self.rules.replicated
+
+        with enable_x64():
+            self.dev = device_blocks(self.bs)
+            # routing table: block index -> owning device (host-built once;
+            # rebuilt by constructing a new engine after a re-mesh)
+            self.block_owner = jnp.asarray(np.asarray(self.rules.owner(
+                jnp.asarray(self.bs.ids, jnp.int32),
+                jnp.uint32(salt))), jnp.int32)
+
+            def my_device():
+                return jax.lax.axis_index(axis_names).astype(jnp.int32)
+
+            def routed_rows(x_rows, owner):
+                """Keep rows this device owns, psum the one-hot merge."""
+                mine = owner == my_device()
+                return jax.lax.psum(jnp.where(mine, x_rows, 0.0),
+                                    axis_names)
+
+            def pr_body(dev, owner):
+                return _pagerank_while(
+                    dev, damping, pagerank_iters, pagerank_tol,
+                    lambda share: routed_rows(
+                        pagerank_row_sums(dev, share), owner))
+
+            self._pagerank = jax.jit(shard_map(
+                pr_body, mesh=mesh, in_specs=(rep, rep), out_specs=rep,
+                check_vma=False))
+
+            def tri_body(dev, owner):
+                tri = routed_rows(triangle_rows(dev, triangle_row_chunk),
+                                  owner)
+                return jnp.sum(tri)
+
+            self._triangle = jax.jit(shard_map(
+                tri_body, mesh=mesh, in_specs=(rep, rep), out_specs=rep,
+                check_vma=False))
+
+            def answer_body(dev, owner, kinds, u, v, pr_blocks, tri):
+                ans = answer_kernel(dev, kinds, u, v, pr_blocks, tri)
+                is_global = jnp.zeros(kinds.shape, bool)
+                for k in _GLOBAL_KINDS:
+                    is_global |= kinds == k
+                target = owner[dev.node2block[u]]
+                mine = jnp.where(is_global, my_device() == 0,
+                                 target == my_device())
+                return jax.lax.psum(jnp.where(mine, ans, 0.0), axis_names)
+
+            self._answer = jax.jit(shard_map(
+                answer_body, mesh=mesh, in_specs=(rep,) * 7,
+                out_specs=rep, check_vma=False))
+
+    def owner_counts(self) -> np.ndarray:
+        """Blocks per owning device — the routing-table histogram."""
+        return np.bincount(np.asarray(self.block_owner),
+                           minlength=self.rules.n_devices)
+
+    def pagerank_blocks(self) -> jax.Array:
+        if self._pr_blocks is None:
+            with enable_x64(), self.mesh:
+                self._pr_blocks = self._pagerank(self.dev,
+                                                 self.block_owner)
+        return self._pr_blocks
+
+    def pagerank_nodes(self, u) -> np.ndarray:
+        pr = self.pagerank_blocks()
+        with enable_x64():
+            out = pr[self.dev.node2block[jnp.asarray(u, jnp.int32)]]
+        return np.asarray(out)
+
+    def triangle_density(self) -> float:
+        if self._tri is None:
+            with enable_x64(), self.mesh:
+                self._tri = self._triangle(self.dev, self.block_owner)
+        return float(self._tri)
+
+    def answer_batch(self, kinds, u, v) -> np.ndarray:
+        kinds = np.asarray(kinds, np.int32)
+        pr = (self.pagerank_blocks() if (kinds == KIND_PAGERANK).any()
+              else None)
+        tri = (self.triangle_density() if (kinds == KIND_TRIANGLE).any()
+               else 0.0)
+        with enable_x64(), self.mesh:
+            if pr is None:
+                pr = jnp.zeros((self.dev.s,), jnp.float64)
+            return np.asarray(self._answer(
+                self.dev, self.block_owner, jnp.asarray(kinds),
+                jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                pr, jnp.asarray(tri, jnp.float64)))

@@ -44,3 +44,16 @@ def test_distributed_step_parity_and_progress():
     # the edge-sharded sparsify phase ran and actually dropped superedges
     # (its drop-mask/metric parity asserts live inside dist_check.py)
     assert rec["sparsify_dropped"] > 0
+
+
+@pytest.mark.slow
+def test_routed_query_engine_parity():
+    """Owner-routed query serving ≡ single-device engine, bit-identical,
+    on an 8-device mesh and again after an elastic 8→4 shrink (routing
+    table rebuild) — body in tests/query_serve_check.py."""
+    rec = _run_check("query_serve_check.py")
+    assert rec["ok"] and rec["served"] > 0
+    # blocks really spread across owners — parity is only meaningful if
+    # more than one device answered queries
+    assert rec["routed_devices_8"] > 1
+    assert rec["routed_devices_4"] > 1
