@@ -1,6 +1,6 @@
 """Bench regression gate (CI): benchmark artifacts vs committed baselines.
 
-Two gated benches, selected with ``--bench``:
+Three gated benches, selected with ``--bench``:
 
   * ``fig6`` (default) — `artifacts/bench/fig6_scalability.json` vs
     `benchmarks/baselines/fig6_baseline.json`, keyed (dataset, scale),
@@ -11,6 +11,11 @@ Two gated benches, selected with ``--bench``:
     `benchmarks/baselines/querybench_baseline.json`, keyed
     (engine, batch), metric qps (lower is worse). Throughput on shared
     runners jitters, so the CI invocation passes a wide --tolerance.
+  * ``multihost`` — `artifacts/bench/multihost.json` vs
+    `benchmarks/baselines/multihost_baseline.json`, keyed (leg,), metric
+    wall_s (higher is worse): the per-leg wall clocks of
+    ``tests/multihost_check.py`` (golden / multihost / resume), so a
+    cross-process slowdown fails the gate like any other regression.
 
 ``--update`` rewrites the selected baseline from the current artifact
 instead (how both baselines were seeded).
@@ -45,6 +50,14 @@ BENCHES = {
         metric="qps",
         higher_is_worse=False,
         keep=("bench", "engine", "batch", "query", "requests", "qps"),
+    ),
+    "multihost": dict(
+        artifact=os.path.join(ART_DIR, "multihost.json"),
+        baseline=os.path.join(BASE_DIR, "multihost_baseline.json"),
+        key=("leg",),
+        metric="wall_s",
+        higher_is_worse=True,
+        keep=("bench", "leg", "processes", "devices_per_process", "wall_s"),
     ),
 }
 

@@ -18,9 +18,16 @@ REQUIRED = ("DESIGN.md", "README.md", "EXPERIMENTS.md")
 # their section here (e.g. §10: streaming ingestion / CSR cache).
 REQUIRED_SECTIONS = {
     "DESIGN.md": {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11",
-                  "12", "13", "14"},
+                  "12", "13", "14", "15"},
     "EXPERIMENTS.md": {"Dry-run", "Roofline", "Perf", "Memory", "Resume",
                        "Queries"},
+}
+
+# README headings other docs/source point operators at by name — same
+# contract as REQUIRED_SECTIONS, but README sections are titled, not
+# §-numbered.
+REQUIRED_HEADINGS = {
+    "README.md": {"Running across hosts"},
 }
 
 
@@ -58,6 +65,12 @@ def main() -> int:
     for doc, required in REQUIRED_SECTIONS.items():
         for miss in sorted(required - sections[doc]):
             errors.append(f"{doc}: missing required section §{miss}")
+    for doc, headings in REQUIRED_HEADINGS.items():
+        with open(os.path.join(ROOT, doc), encoding="utf-8") as f:
+            header_lines = [ln for ln in f if ln.startswith("#")]
+        for h in sorted(headings):
+            if not any(h in ln for ln in header_lines):
+                errors.append(f"{doc}: missing required heading \"{h}\"")
     n_refs = 0
     for path in iter_source_files():
         rel = os.path.relpath(path, ROOT)

@@ -88,6 +88,18 @@ DIST_STAT_KEYS = (
 )
 
 
+def _ordered_psum(x, axis_names):
+    """Order-invariant float sum across the mesh: all_gather the per-device
+    partials, then reduce them locally in device order. A raw ``psum``'s
+    partial-sum grouping depends on the process topology (gloo's
+    cross-process ring groups differently from the single-process
+    reduction, ~1 ulp on f32 accumulations), which would break the
+    launcher-JSON bit-identity contract between single- and multi-process
+    runs of the same global mesh (DESIGN.md §15). Integer-valued psums
+    (counts, histograms) are exact in any order and stay plain ``psum``."""
+    return jnp.sum(jax.lax.all_gather(x, axis_names), axis=0)
+
+
 def _local_pairs(src, dst, node2super, num_nodes: int):
     """Local partial pair table from this device's edge shard (sorted)."""
     e = src.shape[0]
@@ -189,7 +201,7 @@ def _round_metrics(cfg, state, glo, ghi, gcnt, mine, cbar, log2v, v,
         jnp.where(mine & ~keep, gcnt, 0.0))
     p_total = jax.lax.psum(jnp.sum(keep.astype(jnp.float32)), axis_names)
     w_total = jax.lax.pmax(jnp.max(cntk), axis_names)
-    re1_total = jax.lax.psum(re1_local, axis_names)
+    re1_total = _ordered_psum(re1_local, axis_names)
     log2s = jnp.log2(jnp.maximum(s_count, 2.0))
     log2w = jnp.log2(jnp.maximum(w_total, 2.0))
     size_bits = p_total * (2.0 * log2s + log2w) + v * log2s
@@ -526,10 +538,10 @@ def make_distributed_backend(mesh, cfg: SummaryConfig, num_nodes: int,
         size_after = p2 * (2.0 * log2s + jnp.log2(jnp.maximum(w2, 2.0))
                            ) + v * log2s
         dropped_cnt = jnp.where(mine & ~keep2, gcnt, 0.0)
-        re1_sum = jax.lax.psum(
+        re1_sum = _ordered_psum(
             jnp.sum(2.0 * cntk2 * (1.0 - sigma2)) + jnp.sum(dropped_cnt),
             axis_names)
-        re2_sq = jax.lax.psum(
+        re2_sq = _ordered_psum(
             jnp.sum(cntk2 * (1.0 - sigma2)) + jnp.sum(dropped_cnt),
             axis_names)
         denom = float(v) * (v - 1.0)

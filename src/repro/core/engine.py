@@ -95,6 +95,25 @@ def theta_schedule_host(t: int, big_t: int) -> float:
     return 1.0 / (1.0 + t) if t < big_t else 0.0
 
 
+def global_preempt(local: bool) -> bool:
+    """OR a preemption flag across every process in the mesh.
+
+    On a process-spanning mesh (DESIGN.md §15) a SIGTERM lands on each
+    process at a *different* loop position; if one process raised
+    :class:`Preempted` at sync point ``t`` while another had already
+    dispatched chunk ``t+1``, the survivor would hang forever inside a
+    collective. Agreeing on the flag at every sync point — itself a tiny
+    collective — makes all processes take the same branch. Single-process
+    runs return the local flag untouched (no jax call at all).
+    """
+    if jax.process_count() == 1:
+        return bool(local)
+    from jax.experimental import multihost_utils
+
+    flags = multihost_utils.process_allgather(np.asarray(bool(local)))
+    return bool(np.any(flags))
+
+
 class Backend(Protocol):
     """Device-side primitives the engine drives (DESIGN.md §12)."""
 
@@ -202,6 +221,12 @@ class EngineCheckpointer:
     def save(self, backend: Backend, state: SummaryState, payload: dict,
              *, sync: bool = False) -> int:
         step = int(payload["t_next"]) - 1  # completed rounds
+        # On a process-spanning mesh the Alg. 1 state is replicated, so
+        # process 0 writes for everyone (all processes share the directory
+        # — DESIGN.md §15); the others still count the save so the
+        # `checkpoint_saves` bookkeeping stays identical across processes.
+        if jax.process_count() > 1 and jax.process_index() != 0:
+            return step
         extra = dict(payload, fingerprints=self.fingerprints(backend))
         self.manager.save_async(step, state, extra)
         if sync:
@@ -370,6 +395,8 @@ class SummaryEngine:
             if ck is None:
                 return
             preempt = ck.preempted()
+            if ck.guard is not None:
+                preempt = global_preempt(preempt)
             if force or preempt or ck.due(t - 1, last_saved):
                 step = ck.save(backend, state, payload_now(), sync=preempt)
                 saves += 1

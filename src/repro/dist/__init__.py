@@ -18,6 +18,7 @@ location, mesh axis types) so the rest of the tree imports one stable API.
 from repro.dist.compat import make_mesh, shard_map
 from repro.dist.compress import (
     CompressConfig,
+    compressed_allreduce,
     decode_int8,
     encode_int8,
     encode_topk,
@@ -30,6 +31,7 @@ from repro.dist.sharding import MeshRules, make_rules
 __all__ = [
     "CompressConfig",
     "MeshRules",
+    "compressed_allreduce",
     "decode_int8",
     "encode_int8",
     "encode_topk",

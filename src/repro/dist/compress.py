@@ -15,7 +15,12 @@ step):
 
 ``payload_bytes`` prices a tree under a :class:`CompressConfig` — the
 roofline and collective-breakdown tooling use it to convert tree sizes
-into wire bytes.
+into wire bytes. :func:`compressed_allreduce` is the codecs' *collective*
+form: called inside a ``shard_map`` body it moves exactly the priced
+payload over the mesh axes (int8 ints + scales, top-k value/index pairs)
+and returns a psum'd byte counter measured from the actual wire-array
+shapes — so ``launch/train.py`` can assert its accounting against what
+was really exchanged, including across OS processes (DESIGN.md §15).
 """
 
 from __future__ import annotations
@@ -108,6 +113,91 @@ def encode_topk(tree, err, ratio: float):
     sent = jax.tree.unflatten(treedef, [p[0] for p in pairs])
     residual = jax.tree.unflatten(treedef, [p[1] for p in pairs])
     return sent, residual
+
+
+# ---------------------------------------------------------------------------
+# shard_map'd compressed all-reduce
+# ---------------------------------------------------------------------------
+
+
+def _leaf_k(n: int, ratio: float) -> int:
+    return max(int(np.ceil(ratio * n)), 1)
+
+
+def _topk_wire_leaf(g, err, ratio: float, axis_names):
+    """One leaf of the top-k all-reduce: gather value/index pairs, scatter-
+    add; the residual never leaves the device (error feedback is local
+    state — asserted by ``tests/wire_check.py``)."""
+    acc = g.astype(jnp.float32) + err
+    flat = acc.ravel()
+    k = _leaf_k(flat.size, ratio)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx].astype(g.dtype)  # wire dtype = leaf dtype (pricing)
+    # top_k indices are distinct, so .add subtracts exactly the sent values
+    residual = flat.at[idx].add(-vals.astype(jnp.float32)).reshape(g.shape)
+    vg = jax.lax.all_gather(vals, axis_names)  # [n_dev, k]
+    ig = jax.lax.all_gather(idx, axis_names)
+    summed = (jnp.zeros((flat.size,), jnp.float32)
+              .at[ig.ravel()].add(vg.ravel().astype(jnp.float32)))
+    return summed.reshape(g.shape).astype(g.dtype), residual
+
+
+def compressed_allreduce(tree, err, config: CompressConfig, axis_names):
+    """Sum ``tree`` over the mesh axes through the configured wire format.
+
+    Call **inside** a ``shard_map`` body; every device contributes its own
+    ``tree`` (same shapes everywhere) and receives the sum of all
+    contributions. Returns ``(summed, new_err, wire_bytes)``:
+
+    * ``kind="none"`` — a plain ``psum``; exact.
+    * ``kind="int8"`` — each device quantizes its contribution
+      (:func:`encode_int8`), the int8 payloads + f32 scales are
+      all-gathered, and each device decodes-and-sums locally, so only
+      1 B/element (+4 B/leaf) ever crosses the wire.
+    * ``kind="topk"`` — each device gathers only its ``k`` largest
+      accumulated entries as (value, index) pairs; the unsent remainder
+      stays in the **process-local** ``new_err`` residual (pass it back
+      next call; ``None`` means zeros).
+
+    ``wire_bytes`` is a psum'd f32 scalar of the bytes every device put on
+    the wire, computed from the actual wire-array shapes — it equals
+    ``axis_size × payload_bytes(tree, config)`` by construction, which is
+    exactly the assertion ``launch/train.py`` makes.
+    """
+    per_device = 0.0
+    if config.kind == "none":
+        summed = jax.lax.psum(tree, axis_names)
+        new_err = err
+        for g in jax.tree.leaves(tree):
+            per_device += g.size * np.dtype(g.dtype).itemsize
+    elif config.kind == "int8":
+        q, scales = encode_int8(tree)
+        new_err = err
+
+        def _sum_leaf(qi, si):
+            qg = jax.lax.all_gather(qi, axis_names)      # [n_dev, ...] int8
+            sg = jax.lax.all_gather(si, axis_names)      # [n_dev] f32
+            sg = sg.reshape((sg.shape[0],) + (1,) * qi.ndim)
+            return jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+
+        summed = jax.tree.map(_sum_leaf, q, scales)
+        summed = jax.tree.map(lambda s, g: s.astype(g.dtype), summed, tree)
+        for qi in jax.tree.leaves(q):
+            per_device += qi.size * 1 + 4.0  # int8 payload + one f32 scale
+    else:  # topk
+        if err is None:
+            err = init_error_buffers(tree)
+        leaves_g, treedef = jax.tree.flatten(tree)
+        leaves_e = jax.tree.leaves(err)
+        pairs = [_topk_wire_leaf(g, e, config.topk_ratio, axis_names)
+                 for g, e in zip(leaves_g, leaves_e)]
+        summed = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+        new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+        for g in leaves_g:
+            k = _leaf_k(g.size, config.topk_ratio)
+            per_device += k * (np.dtype(g.dtype).itemsize + 4.0)
+    wire_bytes = jax.lax.psum(jnp.float32(per_device), axis_names)
+    return summed, new_err, wire_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ array materialized. See DESIGN.md §11 for the end-to-end data path
 (file → sorted-run spill → CSR cache → per-shard feed → shard_map) and
 its memory-model table.
 
-Two entry points build the same sharded ``jax.Array`` pair:
+Three entry points build the same sharded ``jax.Array`` pair:
 
 * :func:`shard_edges_from_cache` — slices the cache's mmap'd ``.npy``
   members directly (peak host staging = one shard; the mmap'd pages are
@@ -22,7 +22,11 @@ Two entry points build the same sharded ``jax.Array`` pair:
   live in host arrays (synthetic registry graphs); it subsumes the old
   ``pad_and_shard_edges`` and produces **bit-identical** shard contents,
   so the two paths are interchangeable down to the psum'd Eq.(2)/(4)
-  metrics (asserted by ``tests/feed_check.py``).
+  metrics (asserted by ``tests/feed_check.py``);
+* :func:`shard_edges_from_cache_multihost` — the process-spanning-mesh
+  variant of the cache feed: each process stages only the shards its
+  local devices own (DESIGN.md §15). The two single-process entry points
+  refuse process-spanning meshes and point here.
 
 Both fill each shard into the staging buffer, ``device_put`` it onto its
 device, and assemble the global array with
@@ -64,7 +68,9 @@ class FeedStats:
     shard_bytes: int = 0
     peak_staging_bytes: int = 0
     bytes_copied: int = 0
-    path: str = "memory"  # "cache-mmap" | "memory"
+    path: str = "memory"  # "cache-mmap" | "memory" | "cache-mmap-multihost"
+    process_count: int = 1
+    local_shards: int = 0  # shards this process staged (== n_devices when 1 proc)
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -140,6 +146,28 @@ def _edge_sharding(mesh) -> tuple[NamedSharding, int]:
     return NamedSharding(mesh, rules.edge_spec), rules.n_devices
 
 
+def mesh_process_count(mesh) -> int:
+    """Number of OS processes the mesh's devices live in."""
+    return len({d.process_index for d in np.asarray(mesh.devices).ravel()})
+
+
+def _require_single_process(mesh, entry: str) -> None:
+    """The single-process feeds stage EVERY shard locally — on a
+    process-spanning mesh that is both wrong (``device_put`` onto a
+    non-addressable device fails) and, were it patched naively, would
+    re-stage the full |E| on every host. Fail loudly and point at the
+    multi-host entry point instead of letting jax produce an opaque
+    cross-process placement error."""
+    n_proc = mesh_process_count(mesh)
+    if n_proc > 1:
+        raise RuntimeError(
+            f"{entry} feeds every shard from one host and cannot run on a "
+            f"mesh spanning {n_proc} processes; use "
+            f"repro.graphs.feed.shard_edges_from_cache_multihost, which "
+            f"stages only the shards addressable by this process "
+            f"(DESIGN.md §15)")
+
+
 def _madvise_dontneed(column) -> None:
     """Drop the resident pages of an mmap'd column (best-effort)."""
     try:
@@ -151,15 +179,25 @@ def _madvise_dontneed(column) -> None:
 
 
 def _feed_column(column, num_edges: int, sharding, padded: int,
-                 feeder: ShardFeeder, stats: FeedStats) -> jax.Array:
+                 feeder: ShardFeeder, stats: FeedStats,
+                 addressable_only: bool = False) -> jax.Array:
     """Slice one edge column into per-device shards through the feeder.
 
     ``column`` may be an ``np.memmap`` (cache path — each slice is one
     page-streamed memcpy into staging) or a plain ndarray (memory path).
+    With ``addressable_only`` the loop visits only the devices owned by
+    *this* process (``addressable_devices_indices_map``), so each host
+    stages — and mmap-touches — only its own slice of the columns;
+    ``make_array_from_single_device_arrays`` assembles the global array
+    from every process's addressable shards (DESIGN.md §15).
     """
     shape = (padded,)
     singles = []
-    for dev, idx in sharding.devices_indices_map(shape).items():
+    if addressable_only:
+        index_map = sharding.addressable_devices_indices_map(shape)
+    else:
+        index_map = sharding.devices_indices_map(shape)
+    for dev, idx in index_map.items():
         sl = idx[0]
         a = 0 if sl.start is None else int(sl.start)
         b = padded if sl.stop is None else int(sl.stop)
@@ -179,15 +217,20 @@ def _feed_column(column, num_edges: int, sharding, padded: int,
 
 
 def _feed(src, dst, num_edges: int, mesh, feeder: ShardFeeder | None,
-          path: str, num_nodes: int | None) -> EdgeShards:
+          path: str, num_nodes: int | None,
+          addressable_only: bool = False) -> EdgeShards:
     sharding, n_dev = _edge_sharding(mesh)
     shard_rows, padded = shard_layout(num_edges, n_dev)
     feeder = feeder or ShardFeeder()
     stats = FeedStats(num_edges=num_edges, padded_edges=padded,
                       n_devices=n_dev, shard_rows=shard_rows,
-                      shard_bytes=shard_rows * 4, path=path)
-    src_g = _feed_column(src, num_edges, sharding, padded, feeder, stats)
-    dst_g = _feed_column(dst, num_edges, sharding, padded, feeder, stats)
+                      shard_bytes=shard_rows * 4, path=path,
+                      process_count=mesh_process_count(mesh))
+    src_g = _feed_column(src, num_edges, sharding, padded, feeder, stats,
+                         addressable_only)
+    dst_g = _feed_column(dst, num_edges, sharding, padded, feeder, stats,
+                         addressable_only)
+    stats.local_shards = len(src_g.addressable_shards)
     return EdgeShards(src=src_g, dst=dst_g, num_edges=num_edges,
                       num_nodes=num_nodes, stats=stats)
 
@@ -203,6 +246,7 @@ def shard_edges(src, dst, mesh, *, feeder: ShardFeeder | None = None,
     re-gathers it. Inputs must already be canonical (``src < dst``,
     unique — ``repro.core.types.make_graph`` output or a cache column).
     """
+    _require_single_process(mesh, "shard_edges")
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     if src.shape != dst.shape or src.ndim != 1:
@@ -224,6 +268,38 @@ def shard_edges_from_cache(cache_dir: str, mesh, *,
     (``repro.graphs.io.cache_is_fresh``) — callers should re-ingest via
     :func:`repro.graphs.io.load_graph` first.
     """
+    _require_single_process(mesh, "shard_edges_from_cache")
+    return _feed_cache(cache_dir, mesh, feeder, "cache-mmap",
+                       addressable_only=False)
+
+
+def shard_edges_from_cache_multihost(cache_dir: str, mesh, *,
+                                     feeder: ShardFeeder | None = None,
+                                     ) -> EdgeShards:
+    """Multi-host cache feed: each process stages ONLY its local shards.
+
+    Every participating process calls this with the same ``cache_dir``
+    (shared filesystem or an identical local copy) and the same
+    process-spanning mesh, after :func:`repro.launch.mesh.
+    bootstrap_distributed`. Each process mmaps the cache, slices out just
+    the rows its *addressable* devices own, and the global array is
+    assembled from the per-process shards — no host ever materializes (or
+    even pages in) a full-|E| array, so per-host peak RSS stays at one
+    staging shard regardless of process count (DESIGN.md §15; the CI
+    ``multihost`` job asserts the RSS budget). Shard layout and padding
+    are identical to :func:`shard_edges_from_cache`, so the summary — and
+    the launcher JSON — is bit-identical to the single-process run on the
+    same global device count. Also valid on a single-process mesh, where
+    "addressable" means "all" and it degenerates to the cache feed.
+    """
+    return _feed_cache(cache_dir, mesh, feeder,
+                       "cache-mmap-multihost" if mesh_process_count(mesh) > 1
+                       else "cache-mmap",
+                       addressable_only=True)
+
+
+def _feed_cache(cache_dir: str, mesh, feeder: ShardFeeder | None,
+                path: str, *, addressable_only: bool) -> EdgeShards:
     if not graph_io.cache_is_fresh(cache_dir):
         raise FileNotFoundError(
             f"{cache_dir!r}: not a complete ssumm cache "
@@ -238,8 +314,8 @@ def shard_edges_from_cache(cache_dir: str, mesh, *,
         raise ValueError(
             f"{cache_dir!r}: meta.json says |E|={num_edges} but members "
             f"have {src_mm.shape[0]}/{dst_mm.shape[0]} rows")
-    out = _feed(src_mm, dst_mm, num_edges, mesh, feeder, "cache-mmap",
-                int(meta["num_nodes"]))
+    out = _feed(src_mm, dst_mm, num_edges, mesh, feeder, path,
+                int(meta["num_nodes"]), addressable_only)
     _madvise_dontneed(src_mm)
     _madvise_dontneed(dst_mm)
     return out

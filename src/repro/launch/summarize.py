@@ -20,6 +20,14 @@ host staging is one shard, never a full-|E| array, and the JSON reports
 the feed accounting (``feed_*``) plus ``peak_rss_mb``; ``--rss-budget-mb``
 turns the RSS number into a hard exit-status gate (the CI ``ingest`` job
 runs the 1.1M-edge fixture under it).
+
+The mesh may span OS processes (DESIGN.md §15): launch the same command
+on every host with ``--coordinator host:port --num-processes N
+--process-id i`` (or the ``SSUMM_*`` env equivalents) plus
+``--distributed``; each process then stages only its addressable shards
+from the shared CSR cache and the summary is bit-identical to the
+single-process run on the same global device count
+(``tests/multihost_check.py``).
 """
 
 from __future__ import annotations
@@ -38,7 +46,13 @@ from repro.core.distributed import make_distributed_backend
 from repro.core.engine import EngineCheckpointer, SummaryEngine
 from repro.core.types import make_graph
 from repro.graphs import DATASETS, load_graph
-from repro.graphs.feed import EdgeShards, shard_edges, shard_edges_from_cache
+from repro.graphs.feed import (
+    EdgeShards,
+    shard_edges,
+    shard_edges_from_cache,
+    shard_edges_from_cache_multihost,
+)
+from repro.launch.mesh import bootstrap_distributed
 from repro.runtime import (
     RESUMABLE_EXIT,
     CheckpointManager,
@@ -154,6 +168,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--group-size", type=int, default=32)
     ap.add_argument("--distributed", action="store_true",
                     help="edge-sharded shard_map over all local devices")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="jax.distributed coordinator address for a "
+                         "process-spanning mesh (DESIGN.md §15); every "
+                         "process passes the same value")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="total processes in the mesh (default: "
+                         "$SSUMM_NUM_PROCESSES, else single-process)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank in [0, --num-processes)")
     ap.add_argument("--rss-budget-mb", type=float, default=None,
                     help="fail (exit 1) if the process peak RSS exceeds "
                          "this many MB — the CI out-of-core gate")
@@ -179,6 +202,14 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
+
+    # multi-host bootstrap FIRST — jax.distributed.initialize must run
+    # before anything queries device state (single-process: no-op)
+    dist = bootstrap_distributed(args.coordinator, args.num_processes,
+                                 args.process_id)
+    if dist.initialized and not args.distributed:
+        ap.error("--coordinator/--num-processes only make sense with "
+                 "--distributed")
 
     t_load = time.time()
     g = load_graph(args.edge_list or args.dataset,
@@ -229,7 +260,18 @@ def main(argv=None) -> dict:
             # from the mmap'd columns to per-device shards (DESIGN.md §11);
             # only synthetic stand-ins take the in-memory fallback
             t_feed = time.time()
-            if g.cache_dir is not None:
+            if dist.process_count > 1:
+                # process-spanning mesh: every process slices only its own
+                # addressable shards out of the shared cache (DESIGN.md
+                # §15) — the single-process feeds refuse this mesh
+                if g.cache_dir is None:
+                    raise SystemExit(
+                        "multi-process summarize needs a CSR-cached graph "
+                        "(--edge-list or a cached registry dataset): the "
+                        "synthetic in-memory path would materialize the "
+                        "full edge list on every host")
+                shards = shard_edges_from_cache_multihost(g.cache_dir, mesh)
+            elif g.cache_dir is not None:
                 shards = shard_edges_from_cache(g.cache_dir, mesh)
             else:
                 graph, _ = make_graph(src, dst, v)
@@ -258,6 +300,9 @@ def main(argv=None) -> dict:
                 "feed_shard_bytes": fs.shard_bytes,
                 "feed_peak_staging_bytes": fs.peak_staging_bytes,
                 "feed_bytes_copied": fs.bytes_copied,
+                "feed_local_shards": fs.local_shards,
+                "process_count": dist.process_count,
+                "process_index": dist.process_index,
                 "chunk_wall_s": stats["chunk_wall_s"],
                 "straggler_events": stats["straggler_events"],
                 "resumed_from": stats["resumed_from"],

@@ -50,23 +50,45 @@ from repro.runtime import (
 )
 
 
-def build_train_step(model, rules, run: RunConfig, accum: int):
-    from repro.dist.compress import encode_int8, decode_int8, encode_topk
+def build_train_step(model, rules, run: RunConfig, accum: int, mesh=None):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.compat import shard_map
+    from repro.dist.compress import compressed_allreduce
 
     def loss_fn(p, b):
         return model.loss(p, b, rules, remat=run.remat)
 
+    compress = run.grad_compress
+    if compress != "none":
+        if mesh is None:
+            raise ValueError(
+                "grad compression needs the mesh: the codecs run inside a "
+                "shard_map'd all-reduce (pass mesh= to build_train_step)")
+        ccfg = CompressConfig(compress, topk_ratio=run.topk_ratio)
+        axis_names = tuple(mesh.axis_names)
+        n_dev = rules.n_devices
+
+        def wire_allreduce(grads, err):
+            # Each device contributes grads/n_dev; summing the decoded
+            # contributions reconstructs the compressed gradient while the
+            # int8 / top-k payload actually crosses the wire — and, on a
+            # process-spanning mesh, the process boundary (DESIGN.md §15).
+            # For power-of-two device counts the reconstruction is bitwise
+            # the old inline quantize→dequantize transform.
+            def body(g, e):
+                contrib = jax.tree.map(lambda x: x / n_dev, g)
+                return compressed_allreduce(contrib, e, ccfg, axis_names)
+
+            return shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P(), P()),
+                             check_vma=False)(grads, err)
+
     def step_fn(params, opt, batch, err):
         loss, _aux, grads = microbatch_grads(loss_fn, params, batch, accum)
-        # gradient compression at the (cross-pod) collective boundary:
-        # the quantize→dequantize / sparsify→error-feedback transform is
-        # applied to the gradient tree exactly where the wire format would
-        # sit, so convergence behavior matches the compressed deployment
-        if run.grad_compress == "int8":
-            q, s = encode_int8(grads)
-            grads = decode_int8(q, s)
-        elif run.grad_compress == "topk":
-            grads, err = encode_topk(grads, err, run.topk_ratio)
+        wire_bytes = 0.0
+        if compress != "none":
+            grads, err, wire_bytes = wire_allreduce(grads, err)
         lr = cosine_schedule(opt.step + 1, base_lr=run.lr,
                              warmup=run.warmup_steps, total=run.total_steps,
                              min_ratio=run.lr_min_ratio)
@@ -74,7 +96,8 @@ def build_train_step(model, rules, run: RunConfig, accum: int):
             grads, opt, params, lr=lr, weight_decay=run.weight_decay,
             grad_clip=run.grad_clip,
         )
-        return params, opt, err, {"loss": loss, **om}
+        return params, opt, err, {"loss": loss, "wire_bytes": wire_bytes,
+                                  **om}
 
     return step_fn
 
@@ -129,17 +152,18 @@ def main(argv=None) -> dict:
     b_shard = rules.sharding(("batch", "seq"), (args.batch, args.seq))
 
     accum = max(args.accum, plan.accum_steps)
-    step_fn = build_train_step(model, rules, run, accum)
+    step_fn = build_train_step(model, rules, run, accum, mesh)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
     from repro.dist.compress import init_error_buffers, payload_bytes
 
     err = init_error_buffers(params) if args.compress == "topk" else None
+    ccfg = CompressConfig(args.compress, topk_ratio=run.topk_ratio)
     if args.compress != "none":
-        ccfg = CompressConfig(args.compress, topk_ratio=run.topk_ratio)
         full = payload_bytes(params, CompressConfig("none"))
         wire = payload_bytes(params, ccfg)
         print(f"grad compression {args.compress}: {full/2**20:.1f} MiB "
-              f"-> {wire/2**20:.1f} MiB per all-reduce payload")
+              f"-> {wire/2**20:.1f} MiB per all-reduce payload "
+              f"(asserted against the measured wire counter)")
 
     # ---- fault tolerance ---------------------------------------------------
     start_step = 0
@@ -163,6 +187,7 @@ def main(argv=None) -> dict:
 
     # ---- loop --------------------------------------------------------------
     losses = []
+    wire_per_step = None
     t_begin = time.time()
     with mesh:
         for step in range(start_step, args.steps):
@@ -170,6 +195,7 @@ def main(argv=None) -> dict:
             batch = {"tokens": jax.device_put(ds.batch(step), b_shard)}
             params, opt, err, metrics = jit_step(params, opt, batch, err)
             loss = float(metrics["loss"])
+            wire_per_step = float(metrics["wire_bytes"])
             losses.append(loss)
             monitor.end_step(step)
             if step % args.log_every == 0 or step == args.steps - 1:
@@ -193,6 +219,17 @@ def main(argv=None) -> dict:
         "loss_last": losses[-1] if losses else None,
         "stragglers": len(monitor.events),
     }
+    if args.compress != "none" and losses:
+        # wire accounting: what the collective measured (psum'd counter
+        # from the actual wire-array shapes) must equal what
+        # payload_bytes priced — per device, times every device
+        expected = n_dev * payload_bytes(params, ccfg)
+        if not np.isclose(wire_per_step, expected, rtol=1e-6):
+            raise AssertionError(
+                f"wire accounting drift: measured {wire_per_step:.0f} B "
+                f"per step, payload_bytes prices {expected:.0f} B")
+        result["wire_bytes_per_step"] = wire_per_step
+        result["wire_bytes_expected"] = expected
     print(json.dumps(result))
     return result
 

@@ -47,6 +47,20 @@ def test_distributed_step_parity_and_progress():
 
 
 @pytest.mark.slow
+def test_compressed_allreduce_wire_accounting():
+    """The shard_map'd compressed all-reduce moves exactly the payload
+    ``payload_bytes`` prices, sums correctly for every wire format, and
+    keeps the error-feedback residual device-local — body in
+    tests/wire_check.py (single-process 8-device mesh here; the
+    2-process run is tests/multihost_check.py's wire leg)."""
+    rec = _run_check("wire_check.py")
+    assert rec["ok"] and rec["process_count"] == 1
+    for kind in ("none", "int8", "topk"):
+        wb = rec["wire_bytes"][kind]
+        assert wb["measured"] == wb["priced"]
+
+
+@pytest.mark.slow
 def test_routed_query_engine_parity():
     """Owner-routed query serving ≡ single-device engine, bit-identical,
     on an 8-device mesh and again after an elastic 8→4 shrink (routing

@@ -138,3 +138,48 @@ def test_cache_feed_refuses_incomplete_cache(tmp_path, mesh):
     shutil.rmtree(g.cache_dir)
     with pytest.raises(FileNotFoundError):
         shard_edges_from_cache(g.cache_dir, mesh)
+
+
+# ---------------------------------------------------------------------------
+# process-spanning meshes: single-process feeds must refuse, loudly
+# ---------------------------------------------------------------------------
+
+
+def test_single_process_feeds_refuse_spanning_mesh(tmp_path, mesh,
+                                                   monkeypatch):
+    """`shard_edges`/`shard_edges_from_cache` stage every shard from one
+    host — on a process-spanning mesh that silently assumed
+    ``jax.process_count() == 1``. They must instead raise an error naming
+    the multi-host entry point (a single-process CI cannot build a real
+    spanning mesh, so the process census is monkeypatched)."""
+    import repro.graphs.feed as feed_mod
+
+    p = write_edge_list(os.path.join(tmp_path, "g.txt"),
+                        [0, 1, 2], [1, 2, 3], 4)
+    g = load_graph(p)
+    monkeypatch.setattr(feed_mod, "mesh_process_count", lambda _mesh: 2)
+    with pytest.raises(RuntimeError,
+                       match="shard_edges_from_cache_multihost"):
+        shard_edges_from_cache(g.cache_dir, mesh)
+    with pytest.raises(RuntimeError,
+                       match="shard_edges_from_cache_multihost"):
+        shard_edges(np.asarray([0, 1], np.int32),
+                    np.asarray([1, 2], np.int32), mesh)
+
+
+def test_multihost_feed_degenerates_on_single_process(tmp_path, mesh):
+    """On a 1-process mesh the multi-host entry point is the cache feed:
+    same shards, same accounting, path stays "cache-mmap"."""
+    from repro.graphs.feed import shard_edges_from_cache_multihost
+
+    src, dst, v = generate("ego-facebook", scale=0.05)
+    p = write_edge_list(os.path.join(tmp_path, "g.txt"), src, dst, v,
+                        shuffle=True, seed=3)
+    g = load_graph(p)
+    a = shard_edges_from_cache(g.cache_dir, mesh)
+    b = shard_edges_from_cache_multihost(g.cache_dir, mesh)
+    assert b.stats.path == "cache-mmap"
+    assert b.stats.process_count == 1
+    assert b.stats.local_shards == a.stats.local_shards
+    assert np.array_equal(np.asarray(a.src), np.asarray(b.src))
+    assert np.array_equal(np.asarray(a.dst), np.asarray(b.dst))
