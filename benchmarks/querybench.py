@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.querybench --batches 1 8 64 256
 
 Summarizes the benchmark graph once, then serves the same mixed workload
-(degree / adjacency / PageRank probes) three ways:
+(degree / adjacency / PageRank / k-hop / cut / conductance probes) three
+ways:
 
   * ``numpy``        — one `repro.core.queries` call per request, the
     status-quo single-query path (block build memoized; the PageRank probe
@@ -13,6 +14,11 @@ Summarizes the benchmark graph once, then serves the same mixed workload
     across requests: the best a host-side loop can do;
   * ``jax``          — the batched :class:`QueryEngine` at each ``--batches``
     slot width through the `launch.query_serve` scheduler.
+
+The analytics kinds (k-hop / cut / conductance) are swept as a second
+workload under their own ``(engine, batch)`` keys (``numpy-analytics`` /
+``jax-analytics``) so the original ≥10× point-query gate keeps its
+calibration while the new kernels get the same regression coverage.
 
 Rows land in ``artifacts/bench/querybench.json`` (bench="querybench") for
 the `scripts/check_bench.py --bench querybench` regression gate;
@@ -33,14 +39,21 @@ from repro.core import SummaryConfig, summarize
 from repro.core import queries as Q
 from repro.core.queries_jax import (
     KIND_ADJACENCY,
+    KIND_CONDUCTANCE,
+    KIND_CUT,
     KIND_DEGREE,
+    KIND_KHOP,
     KIND_PAGERANK,
     QueryEngine,
 )
 from repro.graphs import load_graph
 from repro.launch.query_serve import QueryServer, random_workload
 
+# the original point-query mix (the ≥10×-vs-numpy CI gate is calibrated
+# on it) and the PR-10 analytics mix, swept separately under their own
+# (engine, batch) baseline keys
 KINDS = [KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK]
+KINDS_ANALYTICS = [KIND_KHOP, KIND_CUT, KIND_CONDUCTANCE]
 
 
 def numpy_serve(res, reqs, pagerank_iters: int, cache_pagerank: bool):
@@ -52,6 +65,12 @@ def numpy_serve(res, reqs, pagerank_iters: int, cache_pagerank: bool):
             out[i] = Q.expected_degree(res, req.u)
         elif req.kind == KIND_ADJACENCY:
             out[i] = Q.adjacency_weight(res, req.u, req.v)
+        elif req.kind == KIND_KHOP:
+            out[i] = Q.k_hop_size(res, req.u, req.v)
+        elif req.kind == KIND_CUT:
+            out[i] = Q.cut_weight(res, req.a, req.b)
+        elif req.kind == KIND_CONDUCTANCE:
+            out[i] = Q.conductance(res, req.a)
         else:
             if cache_pagerank:
                 if pr is None:
@@ -104,34 +123,52 @@ def main(argv=None) -> int:
         emit(rows[-1])
     numpy_qps = rows[0]["qps"]
 
+    # ---- analytics numpy baseline (cached PageRank is irrelevant here) --
+    an_reqs = random_workload(rng, v, args.numpy_requests, KINDS_ANALYTICS)
+    t0 = time.perf_counter()
+    numpy_serve(res, an_reqs, args.pagerank_iters, True)
+    wall = time.perf_counter() - t0
+    an_numpy_qps = len(an_reqs) / max(wall, 1e-9)
+    rows.append({"bench": "querybench", "engine": "numpy-analytics",
+                 "batch": 1, "query": "analytics",
+                 "requests": len(an_reqs), "qps": an_numpy_qps,
+                 "wall_s": wall})
+    emit(rows[-1])
+
     # ---- batched device engine across slot widths ---------------------
     engine = QueryEngine(res, pagerank_iters=args.pagerank_iters)
     speedup_at_gate = None
-    for batch in args.batches:
-        server = QueryServer(engine, slots=batch)
-        for req in random_workload(rng, v, batch, KINDS):  # compile
-            server.submit(req)
-        while server.step():
-            pass
-        server.done.clear()
-        reqs = random_workload(rng, v, args.requests, KINDS)
-        t0 = time.perf_counter()
-        for req in reqs:
-            server.submit(req)
-        while server.step():
-            pass
-        wall = time.perf_counter() - t0
-        lat = np.array([r.t_done - r.t_submit for r in server.done])
-        qps = len(reqs) / max(wall, 1e-9)
-        speedup = qps / numpy_qps
-        rows.append({"bench": "querybench", "engine": "jax", "batch": batch,
-                     "query": "mixed", "requests": len(reqs), "qps": qps,
-                     "p50_latency_s": float(np.percentile(lat, 50)),
-                     "p99_latency_s": float(np.percentile(lat, 99)),
-                     "speedup_vs_numpy": speedup, "wall_s": wall})
-        emit(rows[-1])
-        if batch >= args.min_speedup_batch and speedup_at_gate is None:
-            speedup_at_gate = speedup
+    sweeps = (("jax", "mixed", KINDS, numpy_qps),
+              ("jax-analytics", "analytics", KINDS_ANALYTICS,
+               an_numpy_qps))
+    for label, query, sweep_kinds, base_qps in sweeps:
+        for batch in args.batches:
+            server = QueryServer(engine, slots=batch)
+            for req in random_workload(rng, v, batch, sweep_kinds):
+                server.submit(req)  # compile outside the timed window
+            while server.step():
+                pass
+            server.done.clear()
+            reqs = random_workload(rng, v, args.requests, sweep_kinds)
+            t0 = time.perf_counter()
+            for req in reqs:
+                server.submit(req)
+            while server.step():
+                pass
+            wall = time.perf_counter() - t0
+            lat = np.array([r.t_done - r.t_submit for r in server.done])
+            qps = len(reqs) / max(wall, 1e-9)
+            speedup = qps / base_qps
+            rows.append({"bench": "querybench", "engine": label,
+                         "batch": batch, "query": query,
+                         "requests": len(reqs), "qps": qps,
+                         "p50_latency_s": float(np.percentile(lat, 50)),
+                         "p99_latency_s": float(np.percentile(lat, 99)),
+                         "speedup_vs_numpy": speedup, "wall_s": wall})
+            emit(rows[-1])
+            if (label == "jax" and batch >= args.min_speedup_batch
+                    and speedup_at_gate is None):
+                speedup_at_gate = speedup
 
     path = save_artifact("querybench", rows)
     print(f"saved {path}")

@@ -18,7 +18,7 @@ REQUIRED = ("DESIGN.md", "README.md", "EXPERIMENTS.md")
 # their section here (e.g. §10: streaming ingestion / CSR cache).
 REQUIRED_SECTIONS = {
     "DESIGN.md": {"1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "11",
-                  "12", "13", "14", "15"},
+                  "12", "13", "14", "15", "16"},
     "EXPERIMENTS.md": {"Dry-run", "Roofline", "Perf", "Memory", "Resume",
                        "Queries"},
 }

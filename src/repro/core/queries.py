@@ -13,6 +13,13 @@ O(|V| + |E|):
     (a block-constant vector stays block-constant under Âᵀ D⁻¹, so the
     |V|-dimensional iteration collapses exactly to |S| dimensions).
   * ``triangle_density`` — E[#triangles] of Ĝ from superedge weights.
+  * ``cut_weight`` / ``conductance`` — expected cut mass between node
+    sets and the conductance of a set, from per-block membership counts
+    (the survey's "summary-servable" partition analytics).
+  * ``k_hop_size`` — |{v : dist_Ĝ(u, v) ≤ k}|: BFS on the superedge
+    support, exact for the block-constant Ĝ because every member of a
+    block has the same adjacency (minus the excluded self-pair, which
+    never disconnects anything).
 
 All queries consume one shared structure — :class:`BlockSummary`, the
 compacted block-space CSR built once per :class:`SummaryResult` by
@@ -239,3 +246,100 @@ def triangle_density(res: SummaryResult) -> float:
     """E[#triangles] of Ĝ (sum over supernode triples of σ products),
     restricted to the superedge support — O(|P|·deg) like [19]."""
     return triangle_blocks(build_block_summary(res))
+
+
+# ------------------------------------------------- set / neighborhood queries
+
+def block_counts(bs: BlockSummary, nodes) -> np.ndarray:
+    """Per-block membership counts of a node *set* (float64[S]).
+
+    Nodes are deduplicated — the analytics below are set queries, and the
+    serving layer packs the same counts, so duplicates never change an
+    answer.
+    """
+    cnt = np.zeros(bs.num_blocks, dtype=np.float64)
+    nodes = np.unique(np.asarray(nodes, dtype=np.int64))
+    if nodes.size:
+        np.add.at(cnt, bs.node2block[nodes], 1.0)
+    return cnt
+
+
+def _cut_from_counts(bs: BlockSummary, c_a: np.ndarray, c_b: np.ndarray,
+                     overlap: np.ndarray) -> float:
+    """Σ_{u∈A, v∈B, u≠v} Â_uv from per-block counts.
+
+    Every ordered pair inside one block pair is the same σ, so the sum
+    collapses to Σ_e σ_e · c_A[row] · c_B[col] over the symmetrized CSR
+    (cross pairs appear in both directions, diagonal entries once); the
+    ``overlap`` counts subtract the u == v diagonal of same-block pairs,
+    which Â zeroes (Eq. 1 reconstructs a simple graph).
+    """
+    rows = bs.rows
+    total = float(np.sum(bs.sigma * c_a[rows] * c_b[bs.cols]))
+    diag = rows == bs.cols
+    total -= float(np.sum(bs.sigma[diag] * overlap[rows[diag]]))
+    return total
+
+
+def cut_weight(res: SummaryResult, a_nodes, b_nodes) -> float:
+    """Expected total edge weight between node sets A and B under Ĝ
+    (self-pairs u == v excluded; A and B may overlap)."""
+    bs = build_block_summary(res)
+    a = np.unique(np.asarray(a_nodes, dtype=np.int64))
+    b = np.unique(np.asarray(b_nodes, dtype=np.int64))
+    both = np.intersect1d(a, b, assume_unique=True)
+    return _cut_from_counts(bs, block_counts(bs, a), block_counts(bs, b),
+                            block_counts(bs, both))
+
+
+def conductance(res: SummaryResult, a_nodes) -> float:
+    """φ(A) = cut(A, V∖A) / min(vol(A), vol(V∖A)) on Ĝ, where vol sums
+    expected degrees. Degenerate sets (A empty, A = V, or a zero-volume
+    side) return 0.0 — there is no cut to normalize."""
+    bs = build_block_summary(res)
+    c_a = block_counts(bs, a_nodes)
+    c_c = bs.sizes - c_a
+    vol_a = float(np.sum(c_a * bs.deg))
+    vol_c = float(np.sum(c_c * bs.deg))
+    denom = min(vol_a, vol_c)
+    if denom <= 0.0:
+        return 0.0
+    cut = _cut_from_counts(bs, c_a, c_c, np.zeros(bs.num_blocks))
+    return cut / denom
+
+
+def k_hop_size(res: SummaryResult, u: int, k: int) -> float:
+    """|{v : dist_Ĝ(u, v) ≤ k}| — the size of u's k-hop neighborhood in
+    the reconstructed graph, served from the superedge support.
+
+    Block-constant Ĝ makes this exact in block space: every member of a
+    block has identical adjacency, so one BFS over blocks answers for
+    all |Π| node pairs at once. The frontier after one step from u is
+    the support row of u's block (a self-superedge puts u's own block —
+    i.e. its *other* members — at distance 1); subsequent steps expand
+    over the symmetric support. k = 0 is just {u}.
+    """
+    bs = build_block_summary(res)
+    a0 = int(bs.node2block[int(u)])
+    s = bs.num_blocks
+    reach = np.zeros(s, dtype=bool)
+    if int(k) > 0:
+        rows = bs.rows
+        live = bs.sigma > 0.0
+        lr, lc = rows[live], bs.cols[live]
+
+        def step(r: np.ndarray) -> np.ndarray:
+            out = np.zeros(s, dtype=bool)
+            np.logical_or.at(out, lr, r[lc])
+            return out
+
+        frontier = np.zeros(s, dtype=bool)
+        frontier[a0] = True
+        reach = step(frontier)
+        for _ in range(int(k) - 1):
+            grown = reach | step(reach)
+            if np.array_equal(grown, reach):
+                break
+            reach = grown
+    members = bs.sizes - (np.arange(s) == a0).astype(np.float64)
+    return 1.0 + float(np.sum(np.where(reach, members, 0.0)))

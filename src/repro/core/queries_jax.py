@@ -15,7 +15,11 @@ every query kernel is jitted and vectorized over a ``[B]`` request batch:
     :func:`repro.core.queries.pagerank_blocks` update-for-update including
     the early tolerance break;
   * ``triangle_density`` — per-row wedge sums over the padded-row layout,
-    chunked with ``lax.map`` so memory stays ``O(chunk · D²)``.
+    chunked with ``lax.map`` so memory stays ``O(chunk · D²)``;
+  * ``cut_weight`` / ``conductance`` — node sets packed to per-block count
+    rows on the host, reduced as per-row cut contributions;
+  * ``k_hop_size`` — BFS fixpoint on superedge support in block space
+    (exact for the block-constant Ĝ).
 
 Every kernel reduces each CSR row over the same padded ``[S, D]`` layout,
 so per-row values are bit-identical between the single-device
@@ -24,10 +28,18 @@ routed engine masks each row/query to the device owning its supernode
 (``MeshRules.owner`` — the same hash that routes the distributed merge
 step's pair exchange) and merges with a ``psum`` of disjoint one-hot
 contributions, which is exact in floating point (one real value plus
-zeros). This is the first shard-routing tier of SNIPPETS Snippet 3's
-fan-out → owner-routed progression: *compute* is routed per owner, the
-summary arrays themselves are still replicated per device (the two-tier
-memory-partitioned layout is the follow-up, ROADMAP).
+zeros). This is the shard-routing tier of SNIPPETS Snippet 3's fan-out →
+owner-routed progression: *compute* is routed per owner, the summary
+arrays themselves are still replicated per device.
+
+:class:`PartitionedQueryEngine` is the second, memory-partitioned tier
+(DESIGN.md §16): each device holds only its owned rows of the padded CSR
+plus precomputed halo tables; cross-device lookups go through a per-step
+all-gather of the owned value slab (PageRank shares) or resident halo row
+copies (triangle wedges), with a second-hop all-gather fallback for rows
+denser than ``dense_row_nnz``. Answers stay bit-identical to both
+replicated tiers because per-row reductions and their merge order are
+unchanged — only row *storage* moves.
 """
 
 from __future__ import annotations
@@ -48,14 +60,25 @@ KIND_DEGREE = 0
 KIND_ADJACENCY = 1
 KIND_PAGERANK = 2
 KIND_TRIANGLE = 3
+KIND_KHOP = 4          # u = target node, v = hop count k
+KIND_CUT = 5           # node sets A/B arrive as per-block count rows
+KIND_CONDUCTANCE = 6   # node set A as count row; complement derived
 KIND_NAMES = {
     "degree": KIND_DEGREE,
     "adjacency": KIND_ADJACENCY,
     "pagerank": KIND_PAGERANK,
     "triangle": KIND_TRIANGLE,
+    "khop": KIND_KHOP,
+    "cut": KIND_CUT,
+    "conductance": KIND_CONDUCTANCE,
 }
 # kinds with no per-node target: answered by (routed to) device 0
-_GLOBAL_KINDS = (KIND_TRIANGLE,)
+_GLOBAL_KINDS = (KIND_TRIANGLE, KIND_CUT, KIND_CONDUCTANCE)
+# kinds dispatched through the extended analytics kernel (set counts /
+# BFS inputs) rather than the point-query fast path
+_ANALYTIC_KINDS = (KIND_KHOP, KIND_CUT, KIND_CONDUCTANCE)
+# kinds whose requests carry node sets (packed to count rows on the host)
+_SET_KINDS = (KIND_CUT, KIND_CONDUCTANCE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,8 +116,14 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def device_blocks(bs: BlockSummary) -> DeviceBlocks:
-    """Put a host BlockSummary on device (call under ``enable_x64``)."""
+def host_padded_rows(bs: BlockSummary):
+    """The padded ``[S, D]`` row layout as host numpy arrays.
+
+    Shared by :func:`device_blocks` (replicated tiers) and
+    :func:`build_partition_tables` (partitioned tier) so both tiers pad
+    rows identically — a prerequisite for bit-identical row reductions.
+    Returns ``(pad_cols i32, pad_sigma f64, pad_degw f64)``.
+    """
     s, nnz = bs.num_blocks, bs.nnz
     d = max(1, bs.max_row_nnz())
     rows = bs.rows.astype(np.int64)
@@ -106,6 +135,15 @@ def device_blocks(bs: BlockSummary) -> DeviceBlocks:
         pad_cols[rows, offs] = bs.cols
         pad_sigma[rows, offs] = bs.sigma
         pad_degw[rows, offs] = bs.deg_w
+    return pad_cols, pad_sigma, pad_degw
+
+
+def device_blocks(bs: BlockSummary) -> DeviceBlocks:
+    """Put a host BlockSummary on device (call under ``enable_x64``)."""
+    s, nnz = bs.num_blocks, bs.nnz
+    d = max(1, bs.max_row_nnz())
+    rows = bs.rows.astype(np.int64)
+    pad_cols, pad_sigma, pad_degw = host_padded_rows(bs)
     return DeviceBlocks(
         node2block=jnp.asarray(bs.node2block, jnp.int32),
         sizes=jnp.asarray(bs.sizes, jnp.float64),
@@ -211,6 +249,129 @@ def answer_kernel(dev: DeviceBlocks, kinds, u, v, pr_blocks, tri) -> jax.Array:
         [deg, adj, prq, tri_b], 0.0)
 
 
+def pack_set_counts(bs: BlockSummary, kinds, sets_a, sets_b):
+    """Host-side packing of node-set queries to per-block count rows.
+
+    ``sets_a``/``sets_b`` are length-B sequences (entries for non-set
+    kinds are ignored; may be None). Returns float64 ``(cnt_a, cnt_b, ov)``
+    of shape [B, S]: A-counts, B-counts and |A∩B|-counts per block — the
+    same ``Q.block_counts`` dedup semantics as the numpy reference, so the
+    jitted kernels see identical inputs.
+    """
+    kinds = np.asarray(kinds, np.int32)
+    b, s = kinds.shape[0], bs.num_blocks
+    cnt_a = np.zeros((b, s), np.float64)
+    cnt_b = np.zeros((b, s), np.float64)
+    ov = np.zeros((b, s), np.float64)
+
+    def counts(nodes):
+        out = np.zeros(s, np.float64)
+        nodes = np.unique(np.asarray(nodes, dtype=np.int64))
+        if nodes.size:
+            np.add.at(out, bs.node2block[nodes], 1.0)
+        return out, nodes
+
+    for i, k in enumerate(kinds):
+        if k not in _SET_KINDS:
+            continue
+        a = sets_a[i] if sets_a is not None and sets_a[i] is not None else ()
+        cnt_a[i], a_u = counts(a)
+        if k == KIND_CUT:
+            bb = (sets_b[i]
+                  if sets_b is not None and sets_b[i] is not None else ())
+            cnt_b[i], b_u = counts(bb)
+            ov[i], _ = counts(np.intersect1d(a_u, b_u, assume_unique=True))
+    return cnt_a, cnt_b, ov
+
+
+def cut_rows(dev: DeviceBlocks, c_a, c_b, ov) -> jax.Array:
+    """Per-row cut contributions [B, S] from count rows [B, S].
+
+    Row a contributes ``c_a[a]·Σ_j σ_aj·c_b[col_j] − σ_aa·ov[a]`` — summing
+    over rows reproduces the numpy ``_cut_from_counts`` value. Slots are
+    mapped with ``lax.map`` so memory stays O([S, D]) per slot, and each
+    row reduces its padded entries in storage order on every tier."""
+    s = dev.s
+    ar = jnp.arange(s)
+    sdiag = jnp.sum(dev.pad_sigma * (dev.pad_cols == ar[:, None]), axis=-1)
+
+    def one(args):
+        ca, cb, ov_s = args
+        gathered = cb[jnp.clip(dev.pad_cols, 0, max(s - 1, 0))]
+        rowsum = jnp.sum(dev.pad_sigma * gathered, axis=-1)
+        return ca * rowsum - sdiag * ov_s
+
+    return jax.lax.map(one, (c_a, c_b, ov))
+
+
+def khop_step_rows(dev: DeviceBlocks, reach) -> jax.Array:
+    """One BFS step on superedge support: row a becomes reachable when any
+    neighbor with σ > 0 is in ``reach`` (bool [B, S] → bool [B, S])."""
+    s = dev.s
+
+    def one(r_s):
+        g = r_s[jnp.clip(dev.pad_cols, 0, max(s - 1, 0))] & (
+            dev.pad_sigma > 0)
+        return jnp.any(g, axis=-1)
+
+    return jax.lax.map(one, reach)
+
+
+def analytics_answers(sizes, deg, a0, kinds, kvec, cnt_a, cnt_b, ov,
+                      cut_rows_fn, khop_step_fn, khop_max: int):
+    """(khop, cut, conductance) float64[B] from per-row callbacks.
+
+    All post-row math (volumes, the BFS fixpoint loop, the member sums)
+    operates on replicated [B, S]/[S] arrays in one canonical order, so as
+    long as ``cut_rows_fn``/``khop_step_fn`` return the same per-row floats
+    the three tiers agree bitwise. ``kvec`` carries k for khop slots;
+    conductance derives its complement counts from ``cnt_a`` internally.
+    """
+    s = sizes.shape[0]
+    is_cond = kinds == KIND_CONDUCTANCE
+    cb_eff = jnp.where(is_cond[:, None], sizes[None, :] - cnt_a, cnt_b)
+    ov_eff = jnp.where(is_cond[:, None], 0.0, ov)
+    crows = cut_rows_fn(cnt_a, cb_eff, ov_eff)
+    cut = jnp.sum(crows, axis=-1)
+    vol_a = jnp.sum(cnt_a * deg[None, :], axis=-1)
+    vol_c = jnp.sum((sizes[None, :] - cnt_a) * deg[None, :], axis=-1)
+    denom = jnp.minimum(vol_a, vol_c)
+    cond = jnp.where(denom > 0.0,
+                     cut / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+
+    onehot = a0[:, None] == jnp.arange(s)[None, :]
+
+    def body(t, r):
+        inp = jnp.where(t == 0, onehot, r)
+        nxt = khop_step_fn(inp) | r
+        return jnp.where((t < kvec)[:, None], nxt, r)
+
+    reach = jax.lax.fori_loop(0, khop_max, body, jnp.zeros_like(onehot))
+    members = sizes[None, :] - onehot.astype(jnp.float64)
+    khop = 1.0 + jnp.sum(jnp.where(reach, members, 0.0), axis=-1)
+    return khop, cut, cond
+
+
+def answer_kernel_full(dev: DeviceBlocks, kinds, u, v, pr_blocks, tri,
+                       cnt_a, cnt_b, ov, khop_max: int,
+                       cut_rows_fn=None, khop_step_fn=None) -> jax.Array:
+    """The fused dispatch extended with the analytics kinds (khop carries
+    k in the v lane; cut/conductance read the [B, S] count rows)."""
+    base = answer_kernel(dev, kinds, u, v, pr_blocks, tri)
+    if cut_rows_fn is None:
+        cut_rows_fn = lambda a, b, o: cut_rows(dev, a, b, o)  # noqa: E731
+    if khop_step_fn is None:
+        khop_step_fn = lambda r: khop_step_rows(dev, r)       # noqa: E731
+    a0 = dev.node2block[u]
+    khop, cut, cond = analytics_answers(
+        dev.sizes, dev.deg, a0, kinds, v, cnt_a, cnt_b, ov,
+        cut_rows_fn, khop_step_fn, khop_max)
+    return jnp.select(
+        [kinds == KIND_KHOP, kinds == KIND_CUT,
+         kinds == KIND_CONDUCTANCE],
+        [khop, cut, cond], base)
+
+
 def _pagerank_while(dev: DeviceBlocks, damping: float, iters: int,
                     tol: float, row_sums_fn) -> jax.Array:
     """The shared power-iteration loop; ``row_sums_fn`` is the only part
@@ -245,13 +406,15 @@ class QueryEngine:
 
     def __init__(self, summary: SummaryResult | BlockSummary, *,
                  damping: float = 0.85, pagerank_iters: int = 50,
-                 pagerank_tol: float = 1e-10, triangle_row_chunk: int = 64):
+                 pagerank_tol: float = 1e-10, triangle_row_chunk: int = 64,
+                 khop_max: int = 16):
         self.bs = (summary if isinstance(summary, BlockSummary)
                    else build_block_summary(summary))
         self.damping = damping
         self.pagerank_iters = pagerank_iters
         self.pagerank_tol = pagerank_tol
         self.triangle_row_chunk = triangle_row_chunk
+        self.khop_max = khop_max
         self._pr_blocks = None
         self._tri = None
         with enable_x64():
@@ -259,6 +422,10 @@ class QueryEngine:
             self._degree = jax.jit(degree_kernel)
             self._adjacency = jax.jit(adjacency_kernel)
             self._answer = jax.jit(answer_kernel)
+            self._answer_full = jax.jit(
+                lambda dev, kinds, u, v, pr, tri, ca, cb, ov:
+                answer_kernel_full(dev, kinds, u, v, pr, tri, ca, cb, ov,
+                                   khop_max))
             self._pagerank = jax.jit(
                 lambda dev: _pagerank_while(
                     dev, damping, pagerank_iters, pagerank_tol,
@@ -297,22 +464,58 @@ class QueryEngine:
                 self.dev, jnp.asarray(u, jnp.int32),
                 jnp.asarray(v, jnp.int32)))
 
-    def answer_batch(self, kinds, u, v) -> np.ndarray:
+    def answer_batch(self, kinds, u, v, cnt_a=None, cnt_b=None,
+                     ov=None) -> np.ndarray:
         """Mixed-kind batch: ``kinds``/``u``/``v`` are int32[B]; returns
         float64[B]. The global-query inputs (PageRank vector, triangle
-        scalar) are materialized only if the batch asks for them."""
+        scalar) are materialized only if the batch asks for them. Batches
+        containing analytics kinds (khop/cut/conductance) go through the
+        extended kernel; ``cnt_a``/``cnt_b``/``ov`` are the [B, S] count
+        rows from :func:`pack_set_counts` (zeros when absent)."""
         kinds = np.asarray(kinds, np.int32)
         pr = (self.pagerank_blocks() if (kinds == KIND_PAGERANK).any()
               else None)
         tri = (self.triangle_density() if (kinds == KIND_TRIANGLE).any()
                else 0.0)
+        needs = bool(np.isin(kinds, _ANALYTIC_KINDS).any())
         with enable_x64():
             if pr is None:
                 pr = jnp.zeros((self.dev.s,), jnp.float64)
-            return np.asarray(self._answer(
-                self.dev, jnp.asarray(kinds), jnp.asarray(u, jnp.int32),
-                jnp.asarray(v, jnp.int32), pr,
-                jnp.asarray(tri, jnp.float64)))
+            args = (self.dev, jnp.asarray(kinds),
+                    jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                    pr, jnp.asarray(tri, jnp.float64))
+            if not needs:
+                return np.asarray(self._answer(*args))
+            shape = (kinds.shape[0], self.dev.s)
+            ca, cb, oo = (
+                jnp.zeros(shape, jnp.float64) if x is None
+                else jnp.asarray(x, jnp.float64)
+                for x in (cnt_a, cnt_b, ov))
+            return np.asarray(self._answer_full(*args, ca, cb, oo))
+
+    # ------------------------------------------------- analytics queries
+    def cut_weight(self, sets_a, sets_b) -> np.ndarray:
+        """Batched Ĝ cut weight between node-set pairs (length-B lists)."""
+        b = len(sets_a)
+        kinds = np.full(b, KIND_CUT, np.int32)
+        ca, cb, ov = pack_set_counts(self.bs, kinds, sets_a, sets_b)
+        z = np.zeros(b, np.int32)
+        return self.answer_batch(kinds, z, z, ca, cb, ov)
+
+    def conductance(self, sets_a) -> np.ndarray:
+        """Batched Ĝ conductance of node sets (length-B list)."""
+        b = len(sets_a)
+        kinds = np.full(b, KIND_CONDUCTANCE, np.int32)
+        ca, cb, ov = pack_set_counts(self.bs, kinds, sets_a, None)
+        z = np.zeros(b, np.int32)
+        return self.answer_batch(kinds, z, z, ca, cb, ov)
+
+    def k_hop_size(self, u, k) -> np.ndarray:
+        """Batched expected k-hop neighborhood size (u, k broadcast)."""
+        u = np.asarray(u, np.int32).ravel()
+        k = np.broadcast_to(np.asarray(k, np.int32), u.shape)
+        kinds = np.full(u.shape, KIND_KHOP, np.int32)
+        return self.answer_batch(kinds, u, k)
 
 
 class RoutedQueryEngine:
@@ -335,12 +538,13 @@ class RoutedQueryEngine:
     def __init__(self, summary: SummaryResult | BlockSummary, mesh, *,
                  salt: int = 0, damping: float = 0.85,
                  pagerank_iters: int = 50, pagerank_tol: float = 1e-10,
-                 triangle_row_chunk: int = 64):
+                 triangle_row_chunk: int = 64, khop_max: int = 16):
         self.bs = (summary if isinstance(summary, BlockSummary)
                    else build_block_summary(summary))
         self.mesh = mesh
         self.rules = make_rules(mesh, "summarize")
         self.salt = salt
+        self.khop_max = khop_max
         self.axis_names = tuple(mesh.axis_names)
         self._pr_blocks = None
         self._tri = None
@@ -383,18 +587,47 @@ class RoutedQueryEngine:
                 tri_body, mesh=mesh, in_specs=(rep, rep), out_specs=rep,
                 check_vma=False))
 
-            def answer_body(dev, owner, kinds, u, v, pr_blocks, tri):
-                ans = answer_kernel(dev, kinds, u, v, pr_blocks, tri)
+            def route_mask(dev, owner, kinds, u):
+                """Which slots this device answers (disjoint across devs)."""
                 is_global = jnp.zeros(kinds.shape, bool)
                 for k in _GLOBAL_KINDS:
                     is_global |= kinds == k
                 target = owner[dev.node2block[u]]
-                mine = jnp.where(is_global, my_device() == 0,
+                return jnp.where(is_global, my_device() == 0,
                                  target == my_device())
+
+            def answer_body(dev, owner, kinds, u, v, pr_blocks, tri):
+                ans = answer_kernel(dev, kinds, u, v, pr_blocks, tri)
+                mine = route_mask(dev, owner, kinds, u)
                 return jax.lax.psum(jnp.where(mine, ans, 0.0), axis_names)
 
             self._answer = jax.jit(shard_map(
                 answer_body, mesh=mesh, in_specs=(rep,) * 7,
+                out_specs=rep, check_vma=False))
+
+            def answer_full_body(dev, owner, kinds, u, v, pr_blocks, tri,
+                                 ca, cb, ov):
+                mine_rows = owner[None, :] == my_device()
+
+                def cut_fn(a_, b_, o_):
+                    rows = cut_rows(dev, a_, b_, o_)
+                    return jax.lax.psum(jnp.where(mine_rows, rows, 0.0),
+                                        axis_names)
+
+                def step_fn(r):
+                    stepped = jnp.where(mine_rows,
+                                        khop_step_rows(dev, r), False)
+                    return jax.lax.psum(stepped.astype(jnp.int32),
+                                        axis_names) > 0
+
+                ans = answer_kernel_full(dev, kinds, u, v, pr_blocks, tri,
+                                         ca, cb, ov, khop_max,
+                                         cut_fn, step_fn)
+                mine = route_mask(dev, owner, kinds, u)
+                return jax.lax.psum(jnp.where(mine, ans, 0.0), axis_names)
+
+            self._answer_full = jax.jit(shard_map(
+                answer_full_body, mesh=mesh, in_specs=(rep,) * 10,
                 out_specs=rep, check_vma=False))
 
     def owner_counts(self) -> np.ndarray:
@@ -421,16 +654,617 @@ class RoutedQueryEngine:
                 self._tri = self._triangle(self.dev, self.block_owner)
         return float(self._tri)
 
-    def answer_batch(self, kinds, u, v) -> np.ndarray:
+    def answer_batch(self, kinds, u, v, cnt_a=None, cnt_b=None,
+                     ov=None) -> np.ndarray:
         kinds = np.asarray(kinds, np.int32)
         pr = (self.pagerank_blocks() if (kinds == KIND_PAGERANK).any()
               else None)
         tri = (self.triangle_density() if (kinds == KIND_TRIANGLE).any()
                else 0.0)
+        needs = bool(np.isin(kinds, _ANALYTIC_KINDS).any())
         with enable_x64(), self.mesh:
             if pr is None:
                 pr = jnp.zeros((self.dev.s,), jnp.float64)
-            return np.asarray(self._answer(
-                self.dev, self.block_owner, jnp.asarray(kinds),
-                jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
-                pr, jnp.asarray(tri, jnp.float64)))
+            args = (self.dev, self.block_owner, jnp.asarray(kinds),
+                    jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                    pr, jnp.asarray(tri, jnp.float64))
+            if not needs:
+                return np.asarray(self._answer(*args))
+            shape = (kinds.shape[0], self.dev.s)
+            ca, cb, oo = (
+                jnp.zeros(shape, jnp.float64) if x is None
+                else jnp.asarray(x, jnp.float64)
+                for x in (cnt_a, cnt_b, ov))
+            return np.asarray(self._answer_full(*args, ca, cb, oo))
+
+    cut_weight = QueryEngine.cut_weight
+    conductance = QueryEngine.conductance
+    k_hop_size = QueryEngine.k_hop_size
+
+
+# ------------------------------------------------------ partitioned tier
+# DESIGN.md §16: each device keeps only its owned rows of the padded
+# [S, D] block CSR plus precomputed halo tables; cross-block lookups are
+# resolved by all-gathering the owned-value *slab* (size ~S/P per device)
+# and indexing it with (src_device, src_position) halo coordinates — the
+# full summary is never materialized on any device.
+
+@dataclasses.dataclass(frozen=True)
+class PartitionTables:
+    """Host-built partition + halo index tables for one (summary, P).
+
+    Deterministic function of ``(BlockSummary, owner, n_devices,
+    dense_row_nnz)`` — rebuilt from scratch on an elastic re-mesh; the
+    halo-table property test pins determinism and coverage. All per-device
+    lists are padded to the per-table max with -1.
+
+    * ``own_gids[p]``      — global block ids device p owns (sorted);
+    * ``halo_*[p]``        — every remote block referenced by p's rows,
+      with its (owner device, position-in-owner's-list) coordinates: the
+      PageRank share exchange gathers owned slabs and reads these;
+    * ``row_halo_gids[p]`` — the non-dense subset whose full padded rows
+      are resident on p (triangle wedge closure needs whole rows);
+    * ``dense_gids``       — rows with nnz > dense_row_nnz ("adversarially
+      dense"): excluded from every resident halo and fetched at kernel
+      time via a second-hop all-gather of the owner-held dense slab;
+    * ``loc_share/loc_row[p, i, j]`` — per owned-row entry, the extended
+      index of that entry's column in [own | halo | (dense) | sentinel].
+    """
+
+    n_devices: int
+    s: int
+    d: int
+    dense_row_nnz: int | None
+    owner: np.ndarray          # int32[S] block -> device
+    block_pos: np.ndarray      # int32[S] position in owner's own list
+    own_gids: np.ndarray       # int32[P, S_own]
+    halo_gids: np.ndarray      # int32[P, H]
+    halo_src_dev: np.ndarray   # int32[P, H]
+    halo_src_pos: np.ndarray   # int32[P, H]
+    row_halo_gids: np.ndarray  # int32[P, Ht]
+    dense_gids: np.ndarray     # int32[n_dense] (sorted)
+    dense_slots: np.ndarray    # int32[P, Dm] dense rows per owner
+    loc_share: np.ndarray      # int32[P, S_own, D]
+    loc_row: np.ndarray        # int32[P, S_own, D]
+
+
+def build_partition_tables(bs: BlockSummary, owner, n_devices: int,
+                           dense_row_nnz: int | None = None,
+                           ) -> PartitionTables:
+    """Build the per-device row partition and halo index tables (host)."""
+    owner = np.asarray(owner, np.int32)
+    p = int(n_devices)
+    s = bs.num_blocks
+    d = max(1, bs.max_row_nnz())
+    pad_cols, _, _ = host_padded_rows(bs)
+
+    row_nnz = np.diff(bs.indptr)
+    dense = np.zeros(s, bool)
+    if dense_row_nnz is not None and s:
+        dense = row_nnz > int(dense_row_nnz)
+    dense_gids = np.flatnonzero(dense).astype(np.int32)
+
+    own_lists = [np.flatnonzero(owner == q).astype(np.int32)
+                 for q in range(p)]
+    s_own = max([1] + [l.size for l in own_lists])
+    block_pos = np.zeros(s, np.int32)
+    for l in own_lists:
+        block_pos[l] = np.arange(l.size, dtype=np.int32)
+
+    dense_lists = [l[dense[l]] for l in own_lists]
+    dmax = max([1] + [l.size for l in dense_lists])
+    dense_slots = np.full((p, dmax), -1, np.int32)
+    dense_slab_pos = np.full(s, -1, np.int32)  # gid -> slot in [P·Dm] slab
+    for q, l in enumerate(dense_lists):
+        dense_slots[q, :l.size] = l
+        dense_slab_pos[l] = q * dmax + np.arange(l.size, dtype=np.int32)
+
+    halo_lists, row_halo_lists = [], []
+    for q in range(p):
+        refs = pad_cols[own_lists[q]]
+        refs = np.unique(refs[refs >= 0]).astype(np.int32)
+        remote = refs[owner[refs] != q]
+        halo_lists.append(remote)
+        row_halo_lists.append(remote[~dense[remote]])
+    h = max([1] + [l.size for l in halo_lists])
+    ht = max([1] + [l.size for l in row_halo_lists])
+
+    own_gids = np.full((p, s_own), -1, np.int32)
+    halo_gids = np.full((p, h), -1, np.int32)
+    halo_src_dev = np.zeros((p, h), np.int32)
+    halo_src_pos = np.zeros((p, h), np.int32)
+    row_halo_gids = np.full((p, ht), -1, np.int32)
+    share_sent = s_own + h
+    row_sent = s_own + ht + p * dmax
+    loc_share = np.full((p, s_own, d), share_sent, np.int32)
+    loc_row = np.full((p, s_own, d), row_sent, np.int32)
+    for q in range(p):
+        own, hl, rhl = own_lists[q], halo_lists[q], row_halo_lists[q]
+        own_gids[q, :own.size] = own
+        halo_gids[q, :hl.size] = hl
+        halo_src_dev[q, :hl.size] = owner[hl]
+        halo_src_pos[q, :hl.size] = block_pos[hl]
+        row_halo_gids[q, :rhl.size] = rhl
+        # gid -> extended-index maps for this device (padding key s -> pad)
+        share_map = np.full(s + 1, share_sent, np.int64)
+        share_map[hl] = s_own + np.arange(hl.size)
+        share_map[own] = block_pos[own]
+        row_map = np.full(s + 1, row_sent, np.int64)
+        dm = np.flatnonzero(dense_slab_pos >= 0)
+        row_map[dm] = s_own + ht + dense_slab_pos[dm]
+        row_map[rhl] = s_own + np.arange(rhl.size)
+        row_map[own] = block_pos[own]  # own rows win over the dense slab
+        cols_own = pad_cols[own]
+        safe = np.where(cols_own >= 0, cols_own, s)
+        loc_share[q, :own.size] = share_map[safe]
+        loc_row[q, :own.size] = row_map[safe]
+
+    return PartitionTables(
+        n_devices=p, s=s, d=d, dense_row_nnz=dense_row_nnz, owner=owner,
+        block_pos=block_pos, own_gids=own_gids, halo_gids=halo_gids,
+        halo_src_dev=halo_src_dev, halo_src_pos=halo_src_pos,
+        row_halo_gids=row_halo_gids, dense_gids=dense_gids,
+        dense_slots=dense_slots, loc_share=loc_share, loc_row=loc_row)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartBlocks:
+    """Device-sharded [P, ...] leaves of the partitioned tier (axis 0 is
+    the device axis; each device addresses only its own [1, ...] slice
+    inside shard_map)."""
+
+    own_gids: jax.Array     # int32[P, S_own]
+    own_cols: jax.Array     # int32[P, S_own, D]
+    own_sigma: jax.Array    # float64[P, S_own, D]
+    own_degw: jax.Array     # float64[P, S_own, D]
+    loc_share: jax.Array    # int32[P, S_own, D]
+    loc_row: jax.Array      # int32[P, S_own, D]
+    halo_src_dev: jax.Array  # int32[P, H]
+    halo_src_pos: jax.Array  # int32[P, H]
+    rh_cols: jax.Array      # int32[P, Ht, D] resident halo rows
+    rh_sigma: jax.Array     # float64[P, Ht, D]
+    dn_cols: jax.Array      # int32[P, Dm, D] dense (second-hop) rows
+    dn_sigma: jax.Array     # float64[P, Dm, D]
+
+
+jax.tree_util.register_pytree_node(
+    PartBlocks,
+    lambda b: (tuple(getattr(b, f.name)
+                     for f in dataclasses.fields(PartBlocks)), None),
+    lambda _, leaves: PartBlocks(*leaves),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RepBlocks:
+    """Replicated O(S)/O(V) metadata of the partitioned tier (the paper's
+    supernode count S is millions at most while rows cost S·D — only the
+    row payload is worth partitioning)."""
+
+    node2block: jax.Array  # int32[V]
+    sizes: jax.Array       # float64[S]
+    deg: jax.Array         # float64[S]
+    owner: jax.Array       # int32[S]
+    block_pos: jax.Array   # int32[S]
+    gids_all: jax.Array    # int32[P, S_own] (replicated copy of own_gids)
+
+
+jax.tree_util.register_pytree_node(
+    RepBlocks,
+    lambda b: (tuple(getattr(b, f.name)
+                     for f in dataclasses.fields(RepBlocks)), None),
+    lambda _, leaves: RepBlocks(*leaves),
+)
+
+
+def _squeeze_part(pb: PartBlocks) -> PartBlocks:
+    """Drop the leading per-device axis inside shard_map bodies."""
+    return jax.tree_util.tree_map(lambda x: x[0], pb)
+
+
+class PartitionedQueryEngine:
+    """Memory-partitioned routed engine: device-sharded block CSR rows.
+
+    Same wire format and bit-identical answers as the replicated tiers,
+    but each device's resident summary is its owned rows (~S/P) plus the
+    halo — the padded rows its owned rows reference on other devices —
+    rather than the full [S, D] CSR. Cross-device σ/share lookups go
+    through the precomputed halo tables: PageRank all-gathers the owned
+    [P, S_own] value slab per step and reads remote shares at
+    (src_device, src_position); the triangle wedge closure keeps full
+    resident copies of (non-dense) halo rows. Rows denser than
+    ``dense_row_nnz`` are excluded from every resident halo and fetched by
+    a second-hop all-gather of the owner-held dense slab at kernel time,
+    bounding resident memory against adversarially dense rows.
+
+    Bit-identity holds for the same reason as the routed tier: every
+    per-row reduction runs over the same padded entries in the same
+    storage order, per-row results are merged into canonical [S]-indexed
+    vectors by a psum of disjoint scatters, and all post-row math is
+    replicated. An elastic re-mesh is a table rebuild: construct a new
+    engine on the survivor mesh.
+    """
+
+    def __init__(self, summary: SummaryResult | BlockSummary, mesh, *,
+                 salt: int = 0, damping: float = 0.85,
+                 pagerank_iters: int = 50, pagerank_tol: float = 1e-10,
+                 triangle_row_chunk: int = 64, khop_max: int = 16,
+                 dense_row_nnz: int | None = None):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import owner_hash_np
+
+        self.bs = (summary if isinstance(summary, BlockSummary)
+                   else build_block_summary(summary))
+        self.mesh = mesh
+        self.rules = make_rules(mesh, "summarize")
+        self.salt = salt
+        self.khop_max = khop_max
+        self.dense_row_nnz = dense_row_nnz
+        self.axis_names = tuple(mesh.axis_names)
+        self._pr_blocks = None
+        self._tri = None
+        axis_names = self.axis_names
+        bs = self.bs
+        n_dev = self.rules.n_devices
+        owner = owner_hash_np(bs.ids, salt, n_dev)
+        self.tables = t = build_partition_tables(
+            bs, owner, n_dev, dense_row_nnz)
+        pad_cols, pad_sigma, pad_degw = host_padded_rows(bs)
+        s, d = t.s, t.d
+        num_nodes = bs.num_nodes
+
+        def rows_of(gids, arr, fill):
+            """Stack per-device padded rows: [P, N] gids -> [P, N, ...]."""
+            out = arr[np.where(gids >= 0, gids, 0)].copy()
+            out[gids < 0] = fill
+            return out
+
+        with enable_x64():
+            shard = NamedSharding(mesh, P(axis_names))
+            rep_sh = NamedSharding(mesh, P())
+
+            def put(x, sh):
+                return jax.device_put(jnp.asarray(x), sh)
+
+            self.part = PartBlocks(
+                own_gids=put(t.own_gids, shard),
+                own_cols=put(rows_of(t.own_gids, pad_cols, -1), shard),
+                own_sigma=put(rows_of(t.own_gids, pad_sigma, 0.0), shard),
+                own_degw=put(rows_of(t.own_gids, pad_degw, 0.0), shard),
+                loc_share=put(t.loc_share, shard),
+                loc_row=put(t.loc_row, shard),
+                halo_src_dev=put(t.halo_src_dev, shard),
+                halo_src_pos=put(t.halo_src_pos, shard),
+                rh_cols=put(rows_of(t.row_halo_gids, pad_cols, -1), shard),
+                rh_sigma=put(rows_of(t.row_halo_gids, pad_sigma, 0.0),
+                             shard),
+                dn_cols=put(rows_of(t.dense_slots, pad_cols, -1), shard),
+                dn_sigma=put(rows_of(t.dense_slots, pad_sigma, 0.0),
+                             shard),
+            )
+            self.rep = RepBlocks(
+                node2block=put(bs.node2block.astype(np.int32), rep_sh),
+                sizes=put(bs.sizes.astype(np.float64), rep_sh),
+                deg=put(bs.deg.astype(np.float64), rep_sh),
+                owner=put(t.owner, rep_sh),
+                block_pos=put(t.block_pos, rep_sh),
+                gids_all=put(t.own_gids, rep_sh),
+            )
+            part_spec = P(axis_names)
+            rep_spec = P()
+
+            def my_device():
+                return jax.lax.axis_index(axis_names).astype(jnp.int32)
+
+            def scatter1(vals, gids):
+                """[S_own] owned values -> [S] canonical (pre-psum)."""
+                safe = jnp.where(gids >= 0, gids, s)
+                return jnp.zeros(s + 1, vals.dtype).at[safe].set(vals)[:s]
+
+            def scatter2(vals, gids):
+                """[B, S_own] -> [B, S] canonical (pre-psum)."""
+                safe = jnp.where(gids >= 0, gids, s)
+                out = jnp.zeros(vals.shape[:-1] + (s + 1,), vals.dtype)
+                return out.at[:, safe].set(vals)[:, :s]
+
+            def full_from_slab(slab, gids_all):
+                """All-gathered owned slab [P, S_own] -> canonical [S]."""
+                safe = jnp.where(gids_all >= 0, gids_all, s)
+                return (jnp.zeros(s + 1, slab.dtype)
+                        .at[safe.ravel()].set(slab.ravel())[:s])
+
+            # ------------------------------------------------- pagerank
+            def pr_body(pb, rb):
+                pb = _squeeze_part(pb)
+                s_own = pb.own_gids.shape[0]
+                valid = pb.own_gids >= 0
+                gsafe = jnp.where(valid, pb.own_gids, 0)
+                deg_own = jnp.where(valid, rb.deg[gsafe], 0.0)
+                vt = float(num_nodes)
+                p0 = jnp.where(valid, 1.0 / vt, 0.0)
+
+                def cond(carry):
+                    _, i, done = carry
+                    return (i < pagerank_iters) & ~done
+
+                def body(carry):
+                    p_own, i, _ = carry
+                    share_own = jnp.where(
+                        deg_own > 0,
+                        p_own / jnp.maximum(deg_own, 1e-300), 0.0)
+                    slab = jax.lax.all_gather(
+                        jnp.stack([p_own, share_own]), axis_names)
+                    halo_share = slab[pb.halo_src_dev, 1, pb.halo_src_pos]
+                    share_ext = jnp.concatenate(
+                        [share_own, halo_share,
+                         jnp.zeros((1,), jnp.float64)])
+                    row_sums = jnp.sum(
+                        pb.own_degw * share_ext[pb.loc_share], axis=-1)
+                    p_full = full_from_slab(slab[:, 0, :], rb.gids_all)
+                    dangling = jnp.sum(
+                        jnp.where(rb.deg <= 0, p_full * rb.sizes, 0.0))
+                    new = ((1.0 - damping) / vt
+                           + damping * (row_sums + dangling / vt))
+                    new = jnp.where(valid, new, 0.0)
+                    resid = jax.lax.pmax(jnp.max(jnp.abs(new - p_own)),
+                                         axis_names)
+                    return new, i + 1, resid < pagerank_tol
+
+                p_own, _, _ = jax.lax.while_loop(
+                    cond, body,
+                    (p0, jnp.int32(0), jnp.bool_(False)))
+                slab = jax.lax.all_gather(p_own, axis_names)
+                return full_from_slab(slab, rb.gids_all)
+
+            self._pagerank = jax.jit(shard_map(
+                pr_body, mesh=mesh, in_specs=(part_spec, rep_spec),
+                out_specs=rep_spec, check_vma=False))
+
+            # ------------------------------------------------- triangle
+            def ext_row_tables(pb):
+                """[own | resident halo | gathered dense slab | sentinel]
+                row tables for the wedge closure."""
+                dmx = pb.dn_cols.shape[0]
+                dn_cols = jax.lax.all_gather(
+                    pb.dn_cols, axis_names).reshape(n_dev * dmx, d)
+                dn_sigma = jax.lax.all_gather(
+                    pb.dn_sigma, axis_names).reshape(n_dev * dmx, d)
+                ext_cols = jnp.concatenate(
+                    [pb.own_cols, pb.rh_cols, dn_cols,
+                     jnp.full((1, d), -1, jnp.int32)])
+                ext_sigma = jnp.concatenate(
+                    [pb.own_sigma, pb.rh_sigma, dn_sigma,
+                     jnp.zeros((1, d), jnp.float64)])
+                return ext_cols, ext_sigma
+
+            def tri_body(pb, rb):
+                pb = _squeeze_part(pb)
+                s_own = pb.own_gids.shape[0]
+                ext_cols, ext_sigma = ext_row_tables(pb)
+                chunk = max(1, min(triangle_row_chunk, s_own))
+                n_chunks = -(-s_own // chunk)
+                row_ids = jnp.arange(n_chunks * chunk, dtype=jnp.int32)
+                row_ids = row_ids.reshape(n_chunks, chunk)
+
+                def one_chunk(idx):
+                    i = jnp.clip(idx, 0, s_own - 1)
+                    ga = pb.own_gids[i]
+                    live = (idx < s_own) & (ga >= 0)
+                    a = jnp.clip(ga, 0, s - 1)
+                    b = pb.own_cols[i]                       # [R, D]
+                    sab = pb.own_sigma[i]
+                    mask_b = (b > a[:, None]) & live[:, None]
+                    e = pb.loc_row[i]
+                    c = ext_cols[e]                          # [R, D, D]
+                    sbc = ext_sigma[e]
+                    mask_c = (c >= 0) & (c > b[:, :, None]) & (
+                        mask_b[:, :, None])
+                    # third side σ_ca looked up in row a's local columns —
+                    # same float as the replicated global-key search
+                    # because the CSR is symmetric (σ_ca == σ_ac).
+                    srow = jnp.where(b < 0, s, b)            # ascending
+                    q = jnp.clip(c, 0, s - 1).reshape(c.shape[0], -1)
+                    pos = jax.vmap(jnp.searchsorted)(srow, q)
+                    pos = jnp.clip(pos, 0, d - 1)
+                    hit = jnp.take_along_axis(srow, pos, 1) == q
+                    sca = jnp.where(
+                        hit, jnp.take_along_axis(sab, pos, 1),
+                        0.0).reshape(c.shape)
+                    nc = rb.sizes[jnp.clip(c, 0, s - 1)]
+                    inner = jnp.sum(
+                        jnp.where(mask_c, sbc * sca * nc, 0.0), axis=-1)
+                    w = jnp.where(
+                        mask_b,
+                        sab * inner * rb.sizes[a][:, None]
+                        * rb.sizes[jnp.clip(b, 0, s - 1)],
+                        0.0)
+                    return jnp.sum(w, axis=-1)
+
+                tri_own = jax.lax.map(one_chunk, row_ids).reshape(-1)
+                tri_own = tri_own[:s_own]
+                tri_full = jax.lax.psum(
+                    scatter1(tri_own, pb.own_gids), axis_names)
+                return jnp.sum(tri_full)
+
+            self._triangle = jax.jit(shard_map(
+                tri_body, mesh=mesh, in_specs=(part_spec, rep_spec),
+                out_specs=rep_spec, check_vma=False))
+
+            # --------------------------------------------------- answers
+            def base_answers(pb, rb, kinds, u, v, pr_full, tri):
+                """Point/global answers from owned rows only (valid on the
+                routing owner; garbage elsewhere is masked by routing)."""
+                s_own = pb.own_gids.shape[0]
+                a0 = rb.node2block[u]
+                bblk = rb.node2block[v]
+                i = jnp.clip(rb.block_pos[a0], 0, s_own - 1)
+                row = pb.own_cols[i]                         # [B, D]
+                srow = jnp.where(row < 0, s, row)
+                pos = jax.vmap(jnp.searchsorted)(srow, bblk[:, None])
+                pos = jnp.clip(pos[:, 0], 0, d - 1)
+                hit = jnp.take_along_axis(
+                    srow, pos[:, None], 1)[:, 0] == bblk
+                sig = jnp.where(
+                    hit,
+                    jnp.take_along_axis(
+                        pb.own_sigma[i], pos[:, None], 1)[:, 0], 0.0)
+                adj = jnp.where(u == v, 0.0, sig)
+                return jnp.select(
+                    [kinds == KIND_DEGREE, kinds == KIND_ADJACENCY,
+                     kinds == KIND_PAGERANK, kinds == KIND_TRIANGLE],
+                    [rb.deg[a0], adj, pr_full[a0],
+                     jnp.broadcast_to(tri, kinds.shape)], 0.0)
+
+            def route_mask(rb, kinds, u):
+                is_global = jnp.zeros(kinds.shape, bool)
+                for k in _GLOBAL_KINDS:
+                    is_global |= kinds == k
+                target = rb.owner[rb.node2block[u]]
+                return jnp.where(is_global, my_device() == 0,
+                                 target == my_device())
+
+            def answer_body(pb, rb, kinds, u, v, pr_full, tri):
+                pb = _squeeze_part(pb)
+                ans = base_answers(pb, rb, kinds, u, v, pr_full, tri)
+                mine = route_mask(rb, kinds, u)
+                return jax.lax.psum(jnp.where(mine, ans, 0.0), axis_names)
+
+            self._answer = jax.jit(shard_map(
+                answer_body, mesh=mesh,
+                in_specs=(part_spec,) + (rep_spec,) * 6,
+                out_specs=rep_spec, check_vma=False))
+
+            def answer_full_body(pb, rb, kinds, u, v, pr_full, tri,
+                                 ca, cb, ov):
+                pb = _squeeze_part(pb)
+                base = base_answers(pb, rb, kinds, u, v, pr_full, tri)
+                gsafe = jnp.clip(pb.own_gids, 0, s - 1)
+                valid = pb.own_gids >= 0
+                sdiag = jnp.sum(
+                    pb.own_sigma * (pb.own_cols == gsafe[:, None]),
+                    axis=-1)
+
+                def cut_fn(a_, b_, o_):
+                    def one(args):
+                        c_a, c_b, oo = args
+                        gath = c_b[jnp.clip(pb.own_cols, 0,
+                                            max(s - 1, 0))]
+                        rowsum = jnp.sum(pb.own_sigma * gath, axis=-1)
+                        return jnp.where(
+                            valid,
+                            c_a[gsafe] * rowsum - sdiag * oo[gsafe], 0.0)
+
+                    rows_own = jax.lax.map(one, (a_, b_, o_))
+                    return jax.lax.psum(
+                        scatter2(rows_own, pb.own_gids), axis_names)
+
+                def step_fn(r):
+                    def one(r_s):
+                        g = r_s[jnp.clip(pb.own_cols, 0,
+                                         max(s - 1, 0))] & (
+                            pb.own_sigma > 0)
+                        return jnp.any(g, axis=-1)
+
+                    rows_own = jax.lax.map(one, r)
+                    full = jax.lax.psum(
+                        scatter2(rows_own.astype(jnp.int32),
+                                 pb.own_gids), axis_names)
+                    return full > 0
+
+                a0 = rb.node2block[u]
+                khop, cut, cond = analytics_answers(
+                    rb.sizes, rb.deg, a0, kinds, v, ca, cb, ov,
+                    cut_fn, step_fn, khop_max)
+                ans = jnp.select(
+                    [kinds == KIND_KHOP, kinds == KIND_CUT,
+                     kinds == KIND_CONDUCTANCE],
+                    [khop, cut, cond], base)
+                mine = route_mask(rb, kinds, u)
+                return jax.lax.psum(jnp.where(mine, ans, 0.0), axis_names)
+
+            self._answer_full = jax.jit(shard_map(
+                answer_full_body, mesh=mesh,
+                in_specs=(part_spec,) + (rep_spec,) * 9,
+                out_specs=rep_spec, check_vma=False))
+
+    # ------------------------------------------------------------ queries
+    def owner_counts(self) -> np.ndarray:
+        return np.bincount(self.tables.owner,
+                           minlength=self.rules.n_devices)
+
+    def pagerank_blocks(self) -> jax.Array:
+        if self._pr_blocks is None:
+            with enable_x64(), self.mesh:
+                self._pr_blocks = self._pagerank(self.part, self.rep)
+        return self._pr_blocks
+
+    def pagerank_nodes(self, u) -> np.ndarray:
+        pr = self.pagerank_blocks()
+        with enable_x64():
+            out = pr[self.rep.node2block[jnp.asarray(u, jnp.int32)]]
+        return np.asarray(out)
+
+    def triangle_density(self) -> float:
+        if self._tri is None:
+            with enable_x64(), self.mesh:
+                self._tri = self._triangle(self.part, self.rep)
+        return float(self._tri)
+
+    def answer_batch(self, kinds, u, v, cnt_a=None, cnt_b=None,
+                     ov=None) -> np.ndarray:
+        kinds = np.asarray(kinds, np.int32)
+        pr = (self.pagerank_blocks() if (kinds == KIND_PAGERANK).any()
+              else None)
+        tri = (self.triangle_density() if (kinds == KIND_TRIANGLE).any()
+               else 0.0)
+        needs = bool(np.isin(kinds, _ANALYTIC_KINDS).any())
+        s = self.tables.s
+        with enable_x64(), self.mesh:
+            if pr is None:
+                pr = jnp.zeros((s,), jnp.float64)
+            args = (self.part, self.rep, jnp.asarray(kinds),
+                    jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                    pr, jnp.asarray(tri, jnp.float64))
+            if not needs:
+                return np.asarray(self._answer(*args))
+            shape = (kinds.shape[0], s)
+            ca, cb, oo = (
+                jnp.zeros(shape, jnp.float64) if x is None
+                else jnp.asarray(x, jnp.float64)
+                for x in (cnt_a, cnt_b, ov))
+            return np.asarray(self._answer_full(*args, ca, cb, oo))
+
+    cut_weight = QueryEngine.cut_weight
+    conductance = QueryEngine.conductance
+    k_hop_size = QueryEngine.k_hop_size
+
+    # ------------------------------------------------- memory accounting
+    def partition_stats(self) -> dict:
+        t = self.tables
+        return {
+            "devices": int(t.n_devices),
+            "s": int(t.s),
+            "d": int(t.d),
+            "s_own_max": int(t.own_gids.shape[1]),
+            "halo_max": int(t.halo_gids.shape[1]),
+            "row_halo_max": int(t.row_halo_gids.shape[1]),
+            "dense_rows": int(t.dense_gids.size),
+            "owner_counts": self.owner_counts().tolist(),
+            "halo_counts": (t.halo_gids >= 0).sum(axis=1).tolist(),
+            "resident_bytes_per_device": self.resident_bytes_per_device(),
+            "replicated_row_bytes": self.replicated_row_bytes(),
+        }
+
+    def resident_bytes_per_device(self) -> int:
+        """Measured per-device bytes of the sharded row payload (every
+        [P, ...] leaf shards evenly: one [1, ...] slice per device)."""
+        return int(sum(
+            leaf.addressable_shards[0].data.nbytes
+            for leaf in jax.tree_util.tree_leaves(self.part)))
+
+    def replicated_row_bytes(self) -> int:
+        """What the replicated tiers keep per device for the same rows:
+        the full padded [S, D] CSR (cols i32 + σ f64 + deg_w f64)."""
+        t = self.tables
+        return int(t.s) * int(t.d) * (4 + 8 + 8)

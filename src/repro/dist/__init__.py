@@ -26,7 +26,7 @@ from repro.dist.compress import (
     payload_bytes,
 )
 from repro.dist.microbatch import microbatch_grads
-from repro.dist.sharding import MeshRules, make_rules
+from repro.dist.sharding import MeshRules, make_rules, owner_hash_np
 
 __all__ = [
     "CompressConfig",
@@ -39,6 +39,7 @@ __all__ = [
     "make_mesh",
     "make_rules",
     "microbatch_grads",
+    "owner_hash_np",
     "payload_bytes",
     "shard_map",
 ]

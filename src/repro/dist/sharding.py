@@ -17,7 +17,12 @@ Modes:
     flash-decoding cache splits (``kvseq``) on the model axis;
   * ``summarize`` — edges sharded over *every* mesh axis, partition state
     replicated (DESIGN.md §7), plus the supernode ownership hash used by
-    the pair-routing all-to-all.
+    the pair-routing all-to-all;
+  * ``eval``      — offline batch inference: the batch dimension is
+    sharded over *every* mesh axis (throughput, not latency, is the
+    objective) and parameters stay replicated — no TP collectives in the
+    step, so independent shards stream through with zero cross-device
+    traffic.
 
 Rule application is shape-aware: a mesh axis is dropped for a given array
 dimension when it does not divide the dimension or is already taken by an
@@ -32,6 +37,7 @@ from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -49,7 +55,23 @@ _LOGICAL = _TP_AXES + (
 # predicts record placement agree on the routing.
 OWNER_HASH_MULT = 2654435761
 
-MODES = ("train", "serve", "summarize")
+MODES = ("train", "serve", "summarize", "eval")
+
+
+def owner_hash_np(ids, salt: int, n_devices: int) -> "np.ndarray":
+    """Numpy twin of :meth:`MeshRules.owner` — same uint32 math, host side.
+
+    The partitioned query tier builds its halo tables on the host before
+    any device data exists; it must agree bit-for-bit with the device-side
+    routing hash (tests/test_sharding_rules.py pins the equivalence).
+    """
+    ids = np.asarray(ids)
+    with np.errstate(over="ignore"):
+        x = (ids.astype(np.uint32) * np.uint32(OWNER_HASH_MULT)) ^ np.uint32(
+            salt
+        )
+    x = (x >> np.uint32(16)) ^ x
+    return (x % np.uint32(max(1, int(n_devices)))).astype(np.int32)
 
 
 def _dp_axes(mesh) -> tuple:
@@ -164,6 +186,11 @@ def _mode_table(mesh, mode: str) -> dict:
     if mode == "summarize":
         table["edges"] = tuple(mesh.axis_names)
         table["batch"] = dp
+        return table
+    if mode == "eval":
+        # offline batch: every device is a data-parallel lane; weights
+        # replicated, so the only sharded dimension is the batch.
+        table["batch"] = tuple(mesh.axis_names)
         return table
     table.update({name: tp for name in _TP_AXES})
     table["batch"] = dp

@@ -10,19 +10,25 @@
 Summarizes the graph (or loads it through the same registry/CSR-cache
 resolution as ``launch.summarize``), builds the device-resident
 :class:`repro.core.queries_jax.QueryEngine` (``--distributed``: the
-owner-routed :class:`RoutedQueryEngine` over every local device), and
-serves a mixed analytics workload — expected degree, adjacency weight,
-PageRank, triangle density — through the same static-slot scheduler idiom
-as ``launch.serve``: requests pack into a fixed ``--batch``-wide slot
-vector (static shapes ⇒ one compilation), mixed query types route
-per-slot through one fused dispatch, and finished slots refill from the
-queue each step. The JSON reports p50/p99 per-request latency and QPS.
+owner-routed :class:`RoutedQueryEngine` over every local device, or with
+``--tier partitioned`` the memory-partitioned
+:class:`PartitionedQueryEngine`), and serves a mixed analytics workload —
+expected degree, adjacency weight, PageRank, triangle density, k-hop
+neighborhood size, cut weight, conductance — through the same static-slot
+scheduler idiom as ``launch.serve``: requests pack into a fixed
+``--batch``-wide slot vector (static shapes ⇒ one compilation), mixed
+query types route per-slot through one fused dispatch, and finished slots
+refill from the queue each step. The JSON reports p50/p99 per-request
+latency, QPS, and an order-independent sha256 digest of the answers — the
+CI partitioned smoke compares it against the replicated tier's digest for
+cross-process bit-identity.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
 import time
 
@@ -31,9 +37,15 @@ import numpy as np
 
 from repro.core import SummaryConfig, summarize
 from repro.core.queries_jax import (
+    _SET_KINDS,
+    KIND_CONDUCTANCE,
+    KIND_CUT,
+    KIND_KHOP,
     KIND_NAMES,
+    PartitionedQueryEngine,
     QueryEngine,
     RoutedQueryEngine,
+    pack_set_counts,
 )
 from repro.graphs import DATASETS, load_graph
 from repro.runtime import make_mesh_from_plan, plan_mesh
@@ -44,7 +56,9 @@ class QueryRequest:
     rid: int
     kind: int       # KIND_* (repro.core.queries_jax)
     u: int = 0      # target node (degree/pagerank; row side of adjacency)
-    v: int = 0      # second node (adjacency only)
+    v: int = 0      # second node (adjacency); hop count k (khop)
+    a: np.ndarray | None = None  # node set A (cut/conductance)
+    b: np.ndarray | None = None  # node set B (cut)
     answer: float | None = None
     t_submit: float = 0.0
     t_done: float = 0.0
@@ -85,7 +99,16 @@ class QueryServer:
         v = np.zeros(self.slots, np.int32)
         for s, req in enumerate(batch):
             kinds[s], u[s], v[s] = req.kind, req.u, req.v
-        answers = self.engine.answer_batch(kinds, u, v)
+        if np.isin(kinds, _SET_KINDS).any():
+            sets_a = [None] * self.slots
+            sets_b = [None] * self.slots
+            for s, req in enumerate(batch):
+                sets_a[s], sets_b[s] = req.a, req.b
+            ca, cb, ov = pack_set_counts(self.engine.bs, kinds,
+                                         sets_a, sets_b)
+            answers = self.engine.answer_batch(kinds, u, v, ca, cb, ov)
+        else:
+            answers = self.engine.answer_batch(kinds, u, v)
         t = time.perf_counter()
         for s, req in enumerate(batch):
             req.answer = float(answers[s])
@@ -94,14 +117,41 @@ class QueryServer:
         return True
 
 
-def random_workload(rng, v: int, n: int, kinds: list[int]) -> list[QueryRequest]:
-    """A uniform mixed-kind request stream over random target nodes."""
+def random_workload(rng, v: int, n: int, kinds: list[int],
+                    max_set: int | None = None,
+                    k_max: int = 4) -> list[QueryRequest]:
+    """A uniform mixed-kind request stream over random target nodes.
+
+    Set kinds (cut/conductance) draw random node sets of up to
+    ``max_set`` nodes (default v//4, at least 1); khop draws k in
+    [0, ``k_max``] carried in the v lane."""
+    max_set = max(1, v // 4) if max_set is None else max_set
     out = []
     for rid in range(n):
-        out.append(QueryRequest(
-            rid=rid, kind=kinds[rid % len(kinds)],
-            u=int(rng.integers(0, v)), v=int(rng.integers(0, v))))
+        kind = kinds[rid % len(kinds)]
+        req = QueryRequest(rid=rid, kind=kind,
+                           u=int(rng.integers(0, v)),
+                           v=int(rng.integers(0, v)))
+        if kind == KIND_KHOP:
+            req.v = int(rng.integers(0, k_max + 1))
+        elif kind in _SET_KINDS:
+            req.a = rng.choice(v, size=int(rng.integers(1, max_set + 1)),
+                               replace=False)
+            if kind == KIND_CUT:
+                req.b = rng.choice(
+                    v, size=int(rng.integers(1, max_set + 1)),
+                    replace=False)
+        out.append(req)
     return out
+
+
+def answers_digest(done: list[QueryRequest]) -> str:
+    """Order-independent sha256 over (rid, float64 answer) pairs — equal
+    digests ⇒ bit-identical answers for the same workload."""
+    by_rid = sorted((r.rid, r.answer) for r in done)
+    buf = np.array([[float(rid), float(ans)] for rid, ans in by_rid],
+                   np.float64)
+    return hashlib.sha256(buf.tobytes()).hexdigest()
 
 
 def main(argv=None) -> dict:
@@ -124,6 +174,14 @@ def main(argv=None) -> dict:
                          "O(1) per probe on large summaries")
     ap.add_argument("--distributed", action="store_true",
                     help="owner-routed engine over all local devices")
+    ap.add_argument("--tier", default="replicated",
+                    choices=("replicated", "partitioned"),
+                    help="--distributed storage tier: replicated rows "
+                         "(RoutedQueryEngine) or device-sharded rows with "
+                         "halo exchange (PartitionedQueryEngine)")
+    ap.add_argument("--dense-row-nnz", type=int, default=None,
+                    help="partitioned tier: rows denser than this leave "
+                         "the resident halo and use the second-hop route")
     ap.add_argument("--pagerank-iters", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -146,12 +204,20 @@ def main(argv=None) -> dict:
     summarize_wall_s = time.time() - t0
 
     t0 = time.time()
+    partition_stats = None
     if args.distributed:
         plan = plan_mesh(jax.device_count(), global_batch=1, want_model=1)
         mesh = make_mesh_from_plan(plan)
-        engine = RoutedQueryEngine(res, mesh,
-                                   pagerank_iters=args.pagerank_iters)
-        mode = f"routed{dict(mesh.shape)}"
+        if args.tier == "partitioned":
+            engine = PartitionedQueryEngine(
+                res, mesh, pagerank_iters=args.pagerank_iters,
+                dense_row_nnz=args.dense_row_nnz)
+            mode = f"partitioned{dict(mesh.shape)}"
+            partition_stats = engine.partition_stats()
+        else:
+            engine = RoutedQueryEngine(res, mesh,
+                                       pagerank_iters=args.pagerank_iters)
+            mode = f"routed{dict(mesh.shape)}"
         owner_counts = engine.owner_counts().tolist()
     else:
         engine = QueryEngine(res, pagerank_iters=args.pagerank_iters)
@@ -196,10 +262,13 @@ def main(argv=None) -> dict:
         "wall_s": wall,
         "summarize_wall_s": summarize_wall_s,
         "engine_build_wall_s": build_wall_s,
+        "answers_digest": answers_digest(server.done),
         "source": g.source,
     }
     if owner_counts is not None:
         result["owner_counts"] = owner_counts
+    if partition_stats is not None:
+        result["partition_stats"] = partition_stats
     print(json.dumps(result, indent=1))
     return result
 

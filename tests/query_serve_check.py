@@ -3,10 +3,11 @@ its own jax init with fake devices — run via tests/test_distributed.py,
 never imported by pytest).
 
 Checks, against the single-device :class:`QueryEngine` ground truth:
-  1. the 8-device :class:`RoutedQueryEngine` answers a mixed batch
-     (degree / adjacency / PageRank / triangle) bit-identically
-     (``np.array_equal``, not allclose — the psum merges disjoint one-hot
-     contributions, so routing must cost zero ulps);
+  1. the 8-device :class:`RoutedQueryEngine` answers a mixed batch over
+     every query kind (degree / adjacency / PageRank / triangle / k-hop /
+     cut / conductance) bit-identically (``np.array_equal``, not allclose
+     — the psum merges disjoint one-hot contributions, so routing must
+     cost zero ulps);
   2. the full PageRank block vector and triangle scalar are bit-identical;
   3. the routing table actually spreads blocks across devices (the test
      would pass trivially if everything routed to device 0);
@@ -14,7 +15,16 @@ Checks, against the single-device :class:`QueryEngine` ground truth:
      (a routing-table rebuild — the owner hash depends only on device
      count + salt) re-routes every block and stays bit-identical;
   5. the :class:`QueryServer` scheduler drives the routed engine to the
-     same answers as the local engine, request by request.
+     same answers as the local engine, request by request;
+  6. the memory-partitioned :class:`PartitionedQueryEngine` (each device
+     holds only its owned rows + halo tables — DESIGN.md §16) is
+     bit-identical to both tiers for every kind, on the 8-device mesh
+     with a demonstrably non-trivial partition (>1 owner, non-empty
+     halo), after an 8→4 shrink that rebuilds the halo tables, and with
+     a forced second-hop route (``dense_row_nnz`` low enough that dense
+     rows leave the resident halo);
+  7. per-device memory accounting: resident bytes (owned rows + halo)
+     stay strictly below the replicated tier's full row storage.
 """
 
 import os
@@ -30,41 +40,62 @@ import numpy as np
 from repro.core import SummaryConfig, summarize
 from repro.core.queries_jax import (
     KIND_ADJACENCY,
+    KIND_CONDUCTANCE,
+    KIND_CUT,
     KIND_DEGREE,
+    KIND_KHOP,
     KIND_PAGERANK,
     KIND_TRIANGLE,
+    PartitionedQueryEngine,
     QueryEngine,
     RoutedQueryEngine,
+    pack_set_counts,
 )
 from repro.graphs import generate
 from repro.launch.mesh import make_host_mesh
 from repro.launch.query_serve import QueryServer, random_workload
 
 
-def check_parity(local: QueryEngine, routed: RoutedQueryEngine, v: int,
-                 label: str) -> None:
-    rng = np.random.default_rng(42)
-    b = 64
-    kinds = np.array([KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK,
-                      KIND_TRIANGLE] * (b // 4), np.int32)
+def _mixed_batch(v: int, b: int = 63, seed: int = 42):
+    """One batch cycling through every query kind, sets included."""
+    rng = np.random.default_rng(seed)
+    cycle = [KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK, KIND_TRIANGLE,
+             KIND_KHOP, KIND_CUT, KIND_CONDUCTANCE]
+    kinds = np.array([cycle[i % len(cycle)] for i in range(b)], np.int32)
     u = rng.integers(0, v, b).astype(np.int32)
     w = rng.integers(0, v, b).astype(np.int32)
-    want = local.answer_batch(kinds, u, w)
-    got = routed.answer_batch(kinds, u, w)
+    w[kinds == KIND_KHOP] = rng.integers(0, 6, (kinds == KIND_KHOP).sum())
+    sets_a = [None] * b
+    sets_b = [None] * b
+    for s in range(b):
+        if kinds[s] in (KIND_CUT, KIND_CONDUCTANCE):
+            sets_a[s] = rng.choice(v, size=int(rng.integers(1, v // 3)),
+                                   replace=False)
+        if kinds[s] == KIND_CUT:
+            sets_b[s] = rng.choice(v, size=int(rng.integers(1, v // 3)),
+                                   replace=False)
+    return kinds, u, w, sets_a, sets_b
+
+
+def check_parity(local: QueryEngine, other, v: int, label: str) -> None:
+    kinds, u, w, sets_a, sets_b = _mixed_batch(v)
+    ca, cb, ov = pack_set_counts(local.bs, kinds, sets_a, sets_b)
+    want = local.answer_batch(kinds, u, w, ca, cb, ov)
+    got = other.answer_batch(kinds, u, w, ca, cb, ov)
     assert np.array_equal(want, got), (
-        f"{label}: routed batch differs, "
+        f"{label}: batch differs, "
         f"maxdiff={np.abs(want - got).max()}")
     assert np.array_equal(np.asarray(local.pagerank_blocks()),
-                          np.asarray(routed.pagerank_blocks())), (
+                          np.asarray(other.pagerank_blocks())), (
         f"{label}: PageRank block vector differs")
-    assert local.triangle_density() == routed.triangle_density(), label
+    assert local.triangle_density() == other.triangle_density(), label
 
 
-def check_serving(local: QueryEngine, routed: RoutedQueryEngine,
-                  v: int) -> int:
+def check_serving(local: QueryEngine, routed, v: int) -> int:
     rng = np.random.default_rng(3)
     reqs = random_workload(rng, v, 50,
-                           [KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK])
+                           [KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK,
+                            KIND_KHOP, KIND_CUT, KIND_CONDUCTANCE])
     srv_l = QueryServer(local, slots=16)
     srv_r = QueryServer(routed, slots=16)
     for r in reqs:
@@ -108,6 +139,46 @@ def main():
         "shrink did not rebuild the routing table"
     check_parity(local, routed4, v, "mesh(4,) after shrink")
 
+    # ---- partitioned tier: sharded rows + halo exchange (DESIGN.md §16) --
+    part8 = PartitionedQueryEngine(res, mesh8)
+    stats8 = part8.partition_stats()
+    owner_counts = np.asarray(stats8["owner_counts"])
+    assert owner_counts.sum() == res.num_supernodes
+    assert (owner_counts > 0).sum() > 1, (
+        f"degenerate partition: {owner_counts}")
+    halo_max = int(max(stats8["halo_counts"]))
+    assert halo_max > 0, "partition has no cross-device references; " \
+        "the halo exchange is untested"
+    # per-device memory: owned rows + halo strictly below full row storage
+    resident = int(stats8["resident_bytes_per_device"])
+    replicated = int(stats8["replicated_row_bytes"])
+    assert resident < replicated, (resident, replicated)
+    check_parity(local, part8, v, "partitioned mesh(2,4)")
+    # partitioned == routed too (same batch, independent code paths)
+    kinds, u, w, sets_a, sets_b = _mixed_batch(v)
+    ca, cb, ov = pack_set_counts(local.bs, kinds, sets_a, sets_b)
+    assert np.array_equal(
+        routed8.answer_batch(kinds, u, w, ca, cb, ov),
+        part8.answer_batch(kinds, u, w, ca, cb, ov)), \
+        "partitioned differs from routed"
+    served_part = check_serving(local, part8, v)
+
+    # forced second-hop route: a low dense threshold evicts dense rows
+    # from every resident halo — answers must not move a bit
+    dense8 = PartitionedQueryEngine(res, mesh8, dense_row_nnz=2)
+    dstats = dense8.partition_stats()
+    assert dstats["dense_rows"] > 0, "threshold evicted no rows"
+    check_parity(local, dense8, v, "partitioned mesh(2,4) second-hop")
+
+    # elastic shrink 8 -> 4: halo tables rebuilt for the survivor mesh
+    part4 = PartitionedQueryEngine(res, mesh4)
+    stats4 = part4.partition_stats()
+    assert len(stats4["owner_counts"]) == 4
+    assert not np.array_equal(np.asarray(stats4["owner_counts"]),
+                              owner_counts[:4]), \
+        "shrink did not repartition the rows"
+    check_parity(local, part4, v, "partitioned mesh(4,) after shrink")
+
     print(json.dumps({
         "ok": True, "devices": jax.device_count(), "V": v,
         "num_supernodes": res.num_supernodes,
@@ -115,6 +186,13 @@ def main():
         "routed_devices_8": int((counts8 > 0).sum()),
         "routed_devices_4": int((counts4 > 0).sum()),
         "served": served,
+        "partitioned_ok": True,
+        "partitioned_devices_8": int((owner_counts > 0).sum()),
+        "halo_max": halo_max,
+        "resident_bytes_per_device": resident,
+        "replicated_row_bytes": replicated,
+        "dense_rows": int(dstats["dense_rows"]),
+        "served_partitioned": served_part,
     }))
 
 

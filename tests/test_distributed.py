@@ -62,12 +62,21 @@ def test_compressed_allreduce_wire_accounting():
 
 @pytest.mark.slow
 def test_routed_query_engine_parity():
-    """Owner-routed query serving ≡ single-device engine, bit-identical,
-    on an 8-device mesh and again after an elastic 8→4 shrink (routing
-    table rebuild) — body in tests/query_serve_check.py."""
+    """Owner-routed AND memory-partitioned query serving ≡ single-device
+    engine, bit-identical, on an 8-device mesh and again after an elastic
+    8→4 shrink (routing/halo table rebuild) — body in
+    tests/query_serve_check.py."""
     rec = _run_check("query_serve_check.py")
     assert rec["ok"] and rec["served"] > 0
     # blocks really spread across owners — parity is only meaningful if
     # more than one device answered queries
     assert rec["routed_devices_8"] > 1
     assert rec["routed_devices_4"] > 1
+    # partitioned tier: non-trivial partition, real halo traffic, a
+    # forced second-hop route, and per-device residency strictly below
+    # the replicated tier's full row storage
+    assert rec["partitioned_ok"] and rec["served_partitioned"] > 0
+    assert rec["partitioned_devices_8"] > 1
+    assert rec["halo_max"] > 0
+    assert rec["dense_rows"] > 0
+    assert rec["resident_bytes_per_device"] < rec["replicated_row_bytes"]

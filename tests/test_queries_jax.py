@@ -5,8 +5,12 @@ superedge sets, plus the edge cases the old suite missed (self-loop-only
 blocks, dangling blocks, singleton supernodes, empty superedge set,
 ξ-dropped summaries) — the batched JAX answers equal the single-query
 numpy `repro.core.queries` answers equal the dense-reconstruction ground
-truth. Count/size-free float comparisons are pinned far below the
-documented 1e-6 drift budget (both paths are float64)."""
+truth. PR 10 extends the property to the analytics kinds: cut weight,
+conductance, and k-hop size agree with numpy at 1e-9 and with the dense
+Â (indicator bilinear forms / support BFS) over random node sets
+including empty A, A = all nodes, and k = 0. Count/size-free float
+comparisons are pinned far below the documented 1e-6 drift budget (both
+paths are float64)."""
 
 import dataclasses
 
@@ -20,10 +24,14 @@ from repro.core import evaluate as ev
 from repro.core import queries as Q
 from repro.core.queries_jax import (
     KIND_ADJACENCY,
+    KIND_CONDUCTANCE,
+    KIND_CUT,
     KIND_DEGREE,
+    KIND_KHOP,
     KIND_PAGERANK,
     KIND_TRIANGLE,
     QueryEngine,
+    pack_set_counts,
 )
 from repro.core.types import SummaryResult
 from repro.graphs import generate
@@ -119,13 +127,74 @@ def _assert_differential(res: SummaryResult, check_dense_pagerank=True):
         tri_dense = float(np.trace(a_hat @ a_hat @ a_hat) / 6.0)
         np.testing.assert_allclose(tri_np, tri_dense, rtol=1e-8, atol=1e-9)
 
+    # --- cut weight: random pairs + empty A + A = everything -----------
+    sets_a = [rng.choice(v, size=int(rng.integers(0, v + 1)),
+                         replace=False) for _ in range(6)]
+    sets_b = [rng.choice(v, size=int(rng.integers(0, v + 1)),
+                         replace=False) for _ in range(6)]
+    sets_a += [np.array([], np.int64), np.arange(v)]
+    sets_b += [rng.choice(v, size=max(1, v // 2), replace=False),
+               np.arange(v)]
+    cut_jax = eng.cut_weight(sets_a, sets_b)
+    cut_np = np.array([Q.cut_weight(res, a, b)
+                       for a, b in zip(sets_a, sets_b)])
+    np.testing.assert_allclose(cut_jax, cut_np, rtol=0, atol=1e-9)
+    for got, a, b in zip(cut_np, sets_a, sets_b):
+        ia = np.zeros(v)
+        ia[np.asarray(a, np.int64)] = 1.0
+        ib = np.zeros(v)
+        ib[np.asarray(b, np.int64)] = 1.0
+        np.testing.assert_allclose(got, ia @ a_hat @ ib,
+                                   rtol=1e-9, atol=1e-9)
+
+    # --- conductance: same sets (incl. empty and full A -> 0) ----------
+    cond_jax = eng.conductance(sets_a)
+    cond_np = np.array([Q.conductance(res, a) for a in sets_a])
+    np.testing.assert_allclose(cond_jax, cond_np, rtol=0, atol=1e-9)
+    for got, a in zip(cond_np, sets_a):
+        ia = np.zeros(v)
+        ia[np.asarray(a, np.int64)] = 1.0
+        dense_cut = ia @ a_hat @ (1.0 - ia)
+        denom = min(float(ia @ a_hat.sum(1)),
+                    float((1.0 - ia) @ a_hat.sum(1)))
+        want = dense_cut / denom if denom > 0 else 0.0
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+    assert cond_np[-2] == 0.0 and cond_np[-1] == 0.0  # empty / full A
+
+    # --- k-hop size: k = 0 through k = khop_max vs dense BFS -----------
+    # (k is capped at the engine's khop_max BFS budget: below it the
+    # jitted fixpoint loop runs exactly k steps like the numpy reference)
+    ku = rng.integers(0, v, 10).astype(np.int64)
+    kk = np.concatenate([[0, 0], rng.integers(1, 5, 6),
+                         [eng.khop_max, eng.khop_max]])
+    khop_jax = eng.k_hop_size(ku, kk[:10])
+    khop_np = np.array([Q.k_hop_size(res, int(a), int(k))
+                        for a, k in zip(ku, kk)])
+    np.testing.assert_allclose(khop_jax, khop_np, rtol=0, atol=1e-9)
+    support = a_hat > 0
+    for got, a, k in zip(khop_np, ku, kk):
+        reach = np.zeros(v, bool)
+        reach[a] = True
+        for _ in range(min(int(k), v)):
+            reach = reach | (support @ reach)
+        np.testing.assert_allclose(got, float(reach.sum()),
+                                   rtol=1e-9, atol=1e-9)
+    assert np.all(khop_np[:2] == 1.0)  # k = 0 is just the node itself
+
     # --- fused mixed-kind batch == the per-kind kernels ----------------
     b = 16
     kinds = np.array([KIND_DEGREE, KIND_ADJACENCY, KIND_PAGERANK,
-                      KIND_TRIANGLE] * (b // 4), np.int32)
+                      KIND_TRIANGLE, KIND_KHOP, KIND_CUT,
+                      KIND_CONDUCTANCE, KIND_DEGREE] * (b // 8), np.int32)
     bu = rng.integers(0, v, b).astype(np.int32)
     bv = rng.integers(0, v, b).astype(np.int32)
-    ans = eng.answer_batch(kinds, bu, bv)
+    bv[kinds == KIND_KHOP] = rng.integers(0, 4, (kinds == KIND_KHOP).sum())
+    bsets_a = [rng.choice(v, size=int(rng.integers(0, v + 1)),
+                          replace=False) for _ in range(b)]
+    bsets_b = [rng.choice(v, size=int(rng.integers(0, v + 1)),
+                          replace=False) for _ in range(b)]
+    ca, cb, ov = pack_set_counts(eng.bs, kinds, bsets_a, bsets_b)
+    ans = eng.answer_batch(kinds, bu, bv, ca, cb, ov)
     for s in range(b):
         if kinds[s] == KIND_DEGREE:
             want = deg_np[bu[s]]
@@ -133,6 +202,12 @@ def _assert_differential(res: SummaryResult, check_dense_pagerank=True):
             want = Q.adjacency_weight(res, bu[s], bv[s])
         elif kinds[s] == KIND_PAGERANK:
             want = pr_np[bu[s]]
+        elif kinds[s] == KIND_KHOP:
+            want = Q.k_hop_size(res, int(bu[s]), int(bv[s]))
+        elif kinds[s] == KIND_CUT:
+            want = Q.cut_weight(res, bsets_a[s], bsets_b[s])
+        elif kinds[s] == KIND_CONDUCTANCE:
+            want = Q.conductance(res, bsets_a[s])
         else:
             want = tri_np
         np.testing.assert_allclose(ans[s], want, rtol=1e-9, atol=1e-12)

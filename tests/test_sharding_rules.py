@@ -9,7 +9,7 @@ import pytest
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import MODES, make_rules
+from repro.dist.sharding import MODES, MeshRules, make_rules, owner_hash_np
 
 
 def _mesh(axes=("data", "model")):
@@ -33,6 +33,37 @@ def test_summarize_mode_shards_edges_over_all_axes():
     rules = make_rules(_mesh(), "summarize")
     assert rules.edge_spec == P(("data", "model"))
     assert rules.replicated == P()
+
+
+def test_eval_mode_table_is_pure_data_parallel():
+    """Offline eval: the batch spreads over every mesh axis, weights and
+    activations replicate — no tensor-parallel assignment survives."""
+    rules = make_rules(_mesh(), "eval")
+    assert rules.mesh_axes("batch") == ("data", "model")
+    for name, assign in rules.table.items():
+        if name != "batch":
+            assert assign is None, name
+    assert rules.spec(("batch",)) == P(("data", "model"))
+
+
+def test_owner_hash_np_matches_device_hash():
+    """The host-side partition (owner_hash_np) and the device-side router
+    (MeshRules.owner) must agree bit-for-bit, or the partitioned query
+    tier would route probes to devices that do not hold the row."""
+    import types
+
+    import jax.numpy as jnp
+
+    ids = np.arange(1024, dtype=np.int32)
+    for n_dev in (1, 4, 8):
+        mesh = types.SimpleNamespace(size=n_dev, axis_names=("data",))
+        rules = MeshRules(mesh=mesh, mode="summarize", table={})
+        for salt in (0, 1, 17, 2**31 - 1):
+            want = np.asarray(rules.owner(jnp.asarray(ids),
+                                          jnp.uint32(salt)))
+            got = owner_hash_np(ids, salt, n_dev)
+            assert np.array_equal(got, want), (n_dev, salt)
+            assert got.min() >= 0 and got.max() < n_dev
 
 
 def test_override_unknown_logical_name_raises():
